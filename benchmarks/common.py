@@ -1,0 +1,132 @@
+"""Shared experiment harness for the paper-figure benchmarks.
+
+Each figure benchmark builds a fleet (DCGAN + synthetic dataset matched
+to the paper's three datasets), runs communication rounds through the
+Trainer (scheduling + channel timing + FID), and returns convergence
+curves (round, wallclock_s, fid).
+
+Scale: the container is a single CPU core, so the default is a reduced
+DCGAN (32x32, ngf=ndf=16) and REPRO_BENCH_ROUNDS rounds (default 12).
+The paper-faithful full-scale settings (64x64 DCGAN 3.58M/2.77M params,
+n_d=n_g=5, m_k=128, K=10) are selected with REPRO_BENCH_FULL=1.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ProtocolConfig
+from repro.configs.dcgan import DCGANConfig
+from repro.core import Trainer
+from repro.core.channel import ChannelConfig
+from repro.data import make_image_dataset, partition, DATASET_SPECS
+from repro.metrics import fid_score, make_feature_extractor
+from repro.models import dcgan
+from repro.models.specs import make_dcgan_spec
+
+FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
+ROUNDS = int(os.environ.get("REPRO_BENCH_ROUNDS", "60" if FULL else "12"))
+EVAL_EVERY = int(os.environ.get("REPRO_BENCH_EVAL_EVERY", "4"))
+
+
+def dataset_for(name: str):
+    """Map the paper's dataset names onto synthetic stand-ins."""
+    if FULL:
+        return {"celeba": "celeba", "cifar10": "cifar10",
+                "rsna": "rsna"}[name]
+    return {"celeba": "celeba32", "cifar10": "cifar10",
+            "rsna": "rsna32"}[name]
+
+
+def dcgan_for(dataset: str) -> DCGANConfig:
+    spec = DATASET_SPECS[dataset]
+    if FULL:
+        return DCGANConfig(nz=100, ngf=64, ndf=64, nc=spec.channels,
+                           image_size=spec.image_size)
+    return DCGANConfig(nz=32, ngf=16, ndf=16, nc=spec.channels,
+                       image_size=spec.image_size)
+
+
+def protocol_for(*, schedule="serial", k=10, scheduler="all", ratio=1.0,
+                 optimizer="adam") -> ProtocolConfig:
+    # paper: n_d = n_g = 5, m_k = 128; reduced keeps the ratio structure
+    return ProtocolConfig(
+        n_devices=k,
+        n_d=5 if FULL else 2,
+        n_g=5 if FULL else 2,
+        sample_size=128 if FULL else 16,
+        server_sample_size=128 if FULL else 16,
+        lr_d=2e-4 if optimizer == "adam" else 2e-3,
+        lr_g=2e-4 if optimizer == "adam" else 2e-3,
+        schedule=schedule,
+        scheduler=scheduler,
+        scheduling_ratio=ratio,
+        optimizer=optimizer,
+    )
+
+
+@dataclasses.dataclass
+class Curve:
+    label: str
+    rounds: list
+    wallclock: list
+    fid: list
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def run_experiment(label: str, *, dataset="celeba", algorithm="proposed",
+                   schedule="serial", k=10, scheduler="all", ratio=1.0,
+                   rounds=None, seed=0, channel_kw=None,
+                   gen_loss="nonsaturating") -> Curve:
+    ds = dataset_for(dataset)
+    cfg = dcgan_for(ds)
+    spec = make_dcgan_spec(cfg, gen_loss_variant=gen_loss)
+    pcfg = protocol_for(schedule=schedule, k=k, scheduler=scheduler,
+                        ratio=ratio)
+    n = 1280 if FULL else 320
+    imgs, labels = make_image_dataset(ds, n, seed=seed)
+    shards = jnp.asarray(partition(imgs, k, seed=seed))
+
+    feat = make_feature_extractor(cfg.nc)
+    real_feats = feat(jnp.asarray(imgs[: min(n, 512)]))
+
+    def fid_fn(gen_params, key):
+        z = jax.random.normal(key, (256, cfg.nz))
+        fake = dcgan.generator_apply(gen_params, cfg, z)
+        return fid_score(real_feats, feat(fake))
+
+    # FLOP estimates for the channel-time model (fwd+bwd ~ 3x fwd; DCGAN
+    # fwd ~ 2 * params * pixels_factor — a coarse constant is fine, the
+    # figures compare RELATIVE times)
+    step_flops = 6.0 * 3.5e6 * (64 if FULL else 16)
+
+    chan = ChannelConfig(n_devices=k, seed=seed,
+                         **(channel_kw or {}))
+    trainer = Trainer(spec, pcfg, lambda kk: dcgan.gan_init(kk, cfg),
+                      shards, jax.random.PRNGKey(seed),
+                      algorithm=algorithm, channel_cfg=chan,
+                      disc_step_flops=step_flops,
+                      gen_step_flops=step_flops)
+    hist = trainer.run(rounds or ROUNDS, eval_every=EVAL_EVERY,
+                       fid_fn=fid_fn)
+    return Curve(
+        label=label,
+        rounds=[r.round for r in hist],
+        wallclock=[r.cumulative_s for r in hist],
+        fid=[r.fid for r in hist],
+    )
+
+
+def last_fid(curve: Curve):
+    vals = [f for f in curve.fid if f is not None]
+    return vals[-1] if vals else float("nan")
+
+
+def emit_csv_row(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,34 @@
+"""Fig. 5 — comparison with FedGAN [9]. Paper claims: proposed-serial
+converges faster in wall-clock than FedGAN (half the upload bytes, half
+the device compute); proposed-parallel ~ FedGAN."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from benchmarks.common import run_experiment, last_fid, emit_csv_row
+
+
+def main(out_dir="results/bench"):
+    os.makedirs(out_dir, exist_ok=True)
+    curves = []
+    settings = [("proposed-serial", "proposed", "serial"),
+                ("proposed-parallel", "proposed", "parallel"),
+                ("fedgan", "fedgan", "serial")]
+    for label, algorithm, schedule in settings:
+        t0 = time.time()
+        c = run_experiment(f"fig5/{label}", dataset="celeba",
+                           algorithm=algorithm, schedule=schedule)
+        dt = (time.time() - t0) * 1e6 / max(len(c.rounds), 1)
+        curves.append(c)
+        emit_csv_row(f"fig5_{label}", dt,
+                     f"final_fid={last_fid(c):.2f};"
+                     f"wallclock={c.wallclock[-1]:.1f}s")
+    with open(os.path.join(out_dir, "fig5_fedgan.json"), "w") as f:
+        json.dump([c.as_dict() for c in curves], f, indent=2)
+    return curves
+
+
+if __name__ == "__main__":
+    main()

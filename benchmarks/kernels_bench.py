@@ -1,0 +1,100 @@
+"""Kernel microbenchmarks.
+
+On this CPU container the Pallas kernels execute in interpret mode
+(Python), so wall-times are NOT representative of TPU — we benchmark the
+jnp reference paths for host-time numbers and assert the kernels agree
+with them (correctness microbench). Roofline performance of the kernels
+on the v5e target comes from the dry-run analysis, not from here.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit_csv_row
+
+KEY = jax.random.PRNGKey(0)
+
+
+def timeit(fn, *args, iters=5):
+    fn(*args).block_until_ready() if hasattr(fn(*args), "block_until_ready") \
+        else jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def bench_wavg():
+    from repro.core.averaging import weighted_average
+    k, n = 16, 1_000_000
+    x = {"p": jax.random.normal(KEY, (k, n))}
+    w = jnp.ones(k)
+    f = jax.jit(lambda x, w: weighted_average(x, w))
+    us = timeit(f, x, w)
+    gbps = k * n * 4 / (us / 1e6) / 1e9
+    emit_csv_row("wavg_ref_16x1M_f32", us, f"host_GB_s={gbps:.1f}")
+
+
+def bench_ssd():
+    from repro.nn.ssm import ssd_scan_ref
+    b, s, h, p, n = 1, 2048, 8, 64, 64
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, s, 1, n))
+    C = jax.random.normal(ks[4], (b, s, 1, n))
+    f = jax.jit(lambda *a: ssd_scan_ref(*a, chunk=128))
+    us = timeit(f, x, dt, A, B, C)
+    tok_s = b * s / (us / 1e6)
+    emit_csv_row("ssd_scan_ref_2048x8h", us, f"host_tok_s={tok_s:.0f}")
+
+
+def bench_flash():
+    from repro.nn.flash_ref import flash_attention_ref
+    bh, s, d = 8, 2048, 64
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (bh, s, d))
+    k = jax.random.normal(ks[1], (bh, s, d))
+    v = jax.random.normal(ks[2], (bh, s, d))
+    pos = jnp.broadcast_to(jnp.arange(s), (bh, s))
+    f = jax.jit(lambda q, k, v: flash_attention_ref(
+        q, k, v, pos, pos, None, d ** -0.5, True, None, 512, False))
+    us = timeit(f, q, k, v)
+    emit_csv_row("flash_ref_8x2048x64", us,
+                 f"host_GFLOP_s={2 * 2 * bh * s * s * d / (us / 1e6) / 1e9:.1f}")
+
+
+def bench_protocol_round():
+    from repro.configs.base import ProtocolConfig
+    from repro.configs.dcgan import DCGANConfig
+    from repro.core import protocol
+    from repro.models import dcgan
+    from repro.models.specs import make_dcgan_spec
+    cfg = DCGANConfig(nz=32, ngf=16, ndf=16, nc=1, image_size=32)
+    spec = make_dcgan_spec(cfg)
+    pcfg = ProtocolConfig(n_devices=10, n_d=2, n_g=2, sample_size=16,
+                          server_sample_size=16)
+    state = protocol.make_train_state(
+        KEY, lambda k: dcgan.gan_init(k, cfg), pcfg, 10)
+    data = jax.random.normal(KEY, (10, 32, 32, 32, 1))
+    w = jnp.full((10,), 16.0)
+    f = jax.jit(lambda s, d, ww: protocol.gan_round(spec, pcfg, s, d, ww,
+                                                    KEY))
+    us = timeit(f, state, data, w, iters=3)
+    emit_csv_row("protocol_round_K10_dcgan32", us,
+                 "one_full_communication_round")
+
+
+def main():
+    bench_wavg()
+    bench_ssd()
+    bench_flash()
+    bench_protocol_round()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""Pytree checkpointing: flat-key .npz payload + JSON manifest.
+
+Round-resumable: the trainer state (params, optimizer moments, round
+counter, scheduler cursor) round-trips exactly. No external deps.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+
+import jax
+import numpy as np
+
+_SEP = "::"
+
+
+def _flatten(tree):
+    flat = {}
+
+    def walk(prefix, node):
+        if isinstance(node, dict):
+            for k in sorted(node):
+                walk(f"{prefix}{_SEP}{k}" if prefix else str(k), node[k])
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                walk(f"{prefix}{_SEP}[{i}]", v)
+        elif node is None:
+            flat[prefix + f"{_SEP}__none__"] = np.zeros(0)
+        else:
+            flat[prefix] = np.asarray(node)
+
+    walk("", tree)
+    return flat
+
+
+def _unflatten(flat):
+    tree: dict = {}
+    list_marker = re.compile(r"^\[(\d+)\]$")
+    for key in sorted(flat):
+        parts = key.split(_SEP)
+        if parts[-1] == "__none__":
+            parts = parts[:-1]
+            value = None
+        else:
+            value = flat[key]
+        node = tree
+        for i, part in enumerate(parts):
+            last = i == len(parts) - 1
+            if last:
+                node[part] = value
+            else:
+                node = node.setdefault(part, {})
+    # convert {"[0]": ..., "[1]": ...} dicts back to lists
+    def fix(node):
+        if isinstance(node, dict):
+            keys = list(node)
+            if keys and all(list_marker.match(k) for k in keys):
+                return [fix(node[f"[{i}]"]) for i in range(len(keys))]
+            return {k: fix(v) for k, v in node.items()}
+        return node
+
+    return fix(tree)
+
+
+def save_checkpoint(directory: str, step: int, tree, *, metadata=None):
+    os.makedirs(directory, exist_ok=True)
+    host_tree = jax.device_get(tree)
+    flat = _flatten(host_tree)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    tmp = path + ".tmp.npz"   # savez appends .npz unless already present
+    np.savez(tmp, **flat)
+    os.replace(tmp, path)
+    manifest = {"step": step, "n_arrays": len(flat),
+                "metadata": metadata or {}}
+    with open(os.path.join(directory, f"ckpt_{step:08d}.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return path
+
+
+def latest_step(directory: str):
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(directory)
+             if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(directory: str, step: int | None = None):
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    with np.load(path) as data:
+        flat = {k: data[k] for k in data.files}
+    manifest_path = os.path.join(directory, f"ckpt_{step:08d}.json")
+    metadata = {}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            metadata = json.load(f).get("metadata", {})
+    return _unflatten(flat), step, metadata

@@ -1,0 +1,53 @@
+"""Architecture registry: ``get_arch_config(name)`` / ``list_archs()``."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (
+    ArchConfig,
+    MoEConfig,
+    SSMConfig,
+    ShapeConfig,
+    ProtocolConfig,
+    MeshConfig,
+    INPUT_SHAPES,
+)
+
+ARCH_IDS = [
+    "mamba2_130m",
+    "mixtral_8x22b",
+    "whisper_base",
+    "granite_3_2b",
+    "qwen3_1_7b",
+    "granite_moe_3b_a800m",
+    "zamba2_2_7b",
+    "gemma3_12b",
+    "minitron_4b",
+    "llama_3_2_vision_90b",
+]
+
+# Canonical (dashed) ids as assigned, mapped to module names.
+CANONICAL = {
+    "mamba2-130m": "mamba2_130m",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "whisper-base": "whisper_base",
+    "granite-3-2b": "granite_3_2b",
+    "qwen3-1.7b": "qwen3_1_7b",
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "zamba2-2.7b": "zamba2_2_7b",
+    "gemma3-12b": "gemma3_12b",
+    "minitron-4b": "minitron_4b",
+    "llama-3.2-vision-90b": "llama_3_2_vision_90b",
+}
+
+
+def get_arch_config(name: str) -> ArchConfig:
+    mod_name = CANONICAL.get(name, name.replace("-", "_").replace(".", "_"))
+    if mod_name not in ARCH_IDS and mod_name != "dcgan":
+        raise KeyError(f"unknown architecture {name!r}; known: {sorted(CANONICAL)}")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.config()
+
+
+def list_archs():
+    return list(CANONICAL.keys())

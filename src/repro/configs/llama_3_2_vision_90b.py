@@ -1,0 +1,28 @@
+"""llama-3.2-vision-90b [vlm] — cross-attn image layers
+[hf:meta-llama/Llama-3.2-11B-Vision family].
+
+Assigned: 100L, d_model=8192, 64H (GQA kv=8), d_ff=28672, vocab=128256.
+100 layers = 80 self-attention + 20 gated cross-attention layers (one
+after every 4 self layers). The ViT vision encoder + projector is
+STUBBED per instructions: `input_specs()` feeds precomputed patch
+embeddings (b, n_image_tokens, d_model).
+"""
+from repro.configs.base import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="llama-3.2-vision-90b",
+        family="vlm",
+        n_layers=100,            # 80 self + 20 cross
+        d_model=8192,
+        n_heads=64,
+        n_kv_heads=8,
+        d_ff=28672,
+        vocab=128256,
+        cross_attn_every=4,
+        disc_layers=10,         # 2 groups; local-replica HBM budget (DESIGN.md)
+        n_image_tokens=1600,
+        rope_base=500_000.0,
+        source="hf:meta-llama/Llama-3.2-90B-Vision",
+    )

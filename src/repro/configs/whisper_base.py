@@ -1,0 +1,27 @@
+"""whisper-base [audio] — enc-dec, conv frontend (stub) [arXiv:2212.04356].
+
+Assigned: 6L, d_model=512, 8H (GQA kv=8), d_ff=2048, vocab=51865.
+The mel-spectrogram + conv feature extractor is STUBBED per instructions:
+`input_specs()` feeds precomputed frame embeddings (b, enc_seq, d_model).
+Positions use RoPE instead of Whisper's learned/sinusoidal absolute
+embeddings so the assigned 32k serving shapes are representable
+(adaptation recorded in DESIGN.md).
+"""
+from repro.configs.base import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="whisper-base",
+        family="encdec",
+        n_layers=6,              # decoder layers
+        n_enc_layers=6,
+        enc_seq=1500,            # 30 s of audio at 50 Hz after the conv stub
+        d_model=512,
+        n_heads=8,
+        n_kv_heads=8,
+        d_ff=2048,
+        vocab=51865,
+        use_attn_bias=True,
+        source="arXiv:2212.04356 (Whisper)",
+    )

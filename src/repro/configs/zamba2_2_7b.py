@@ -1,0 +1,24 @@
+"""zamba2-2.7b [hybrid] — Mamba2 backbone + shared attention blocks
+[arXiv:2411.15242].
+
+Assigned: 54L, d_model=2560, 32H (GQA kv=32), d_ff=10240, vocab=32000,
+ssm_state=64. The single shared attention+MLP block (one parameter set)
+is invoked after every 6 Mamba2 blocks (9 invocations over 54 layers).
+"""
+from repro.configs.base import ArchConfig, SSMConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="zamba2-2.7b",
+        family="hybrid",
+        n_layers=54,            # Mamba2 blocks
+        d_model=2560,
+        n_heads=32,
+        n_kv_heads=32,          # MHA on the shared block (assigned kv=32)
+        d_ff=10240,             # shared block's MLP
+        vocab=32000,
+        attn_every=6,
+        ssm=SSMConfig(d_state=64, head_dim=64, expand=2, n_groups=1),
+        source="arXiv:2411.15242 (Zamba2)",
+    )

@@ -1,0 +1,25 @@
+"""The paper's primary contribution: the distributed GAN training
+protocol (device discriminators + server generator, Algorithms 1-3, two
+update schedules, device scheduling, wireless channel accounting)."""
+from repro.core.protocol import (
+    GanModelSpec,
+    gan_round,
+    device_update,
+    server_update,
+    centralized_step,
+    make_train_state,
+)
+from repro.core.fedgan import fedgan_round, make_fedgan_state
+from repro.core.averaging import (
+    weighted_average,
+    weighted_average_psum,
+    broadcast_like,
+)
+from repro.core import losses, quantize
+from repro.core.scheduling import SchedulerState, schedule_round
+from repro.core.channel import (
+    ChannelConfig,
+    ChannelSimulator,
+    round_wallclock,
+)
+from repro.core.engine import Trainer

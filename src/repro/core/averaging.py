@@ -1,0 +1,73 @@
+"""Algorithm 2 — server discriminator averaging.
+
+    phi = (sum_{k in S} m_k phi_k) / (sum_{k in S} m_k)
+
+Scheduling is expressed through the weight vector: w_k = m_k for
+scheduled devices and 0 otherwise, so one weighted mean covers partial
+participation, stragglers, and unequal sample sizes.
+
+Three interchangeable implementations:
+  * `weighted_average`      — stacked leading device axis (pjit/GSPMD path;
+                              the mean over the stacked axis lowers to the
+                              all-reduce when that axis is mesh-sharded)
+  * `weighted_average_psum` — explicit collective for the shard_map path
+  * the Pallas `wavg` kernel (repro.kernels.wavg) — TPU hot-spot version,
+    reachable via ``impl="pallas"``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _normalized(weights):
+    weights = weights.astype(jnp.float32)
+    total = jnp.sum(weights)
+    return weights / jnp.maximum(total, 1e-12)
+
+
+def weighted_average(stacked_params, weights, *, impl: str = "jnp"):
+    """stacked_params: pytree with leading device axis K; weights: (K,).
+
+    Returns the weighted average with the leading axis contracted.
+    """
+    w = _normalized(weights)
+
+    if impl == "pallas":
+        from repro.kernels.wavg import ops as wavg_ops
+
+        def avg_leaf(x):
+            return wavg_ops.weighted_average(x, w).astype(x.dtype)
+    else:
+        def avg_leaf(x):
+            wx = w.reshape((-1,) + (1,) * (x.ndim - 1)).astype(jnp.float32)
+            return jnp.sum(x.astype(jnp.float32) * wx, axis=0).astype(x.dtype)
+
+    return jax.tree.map(avg_leaf, stacked_params)
+
+
+def weighted_average_psum(local_params, local_weight, *, axis_names):
+    """shard_map path: every mesh slice holds ITS device's parameters;
+    Algorithm 2 is a weighted psum over the device axes."""
+    total = jax.lax.psum(local_weight.astype(jnp.float32), axis_names)
+
+    def avg_leaf(x):
+        contrib = x.astype(jnp.float32) * local_weight.astype(jnp.float32)
+        summed = jax.lax.psum(contrib, axis_names)
+        return (summed / jnp.maximum(total, 1e-12)).astype(x.dtype)
+
+    return jax.tree.map(avg_leaf, local_params)
+
+
+def broadcast_like(params, n: int):
+    """Tile a pytree to a stacked leading device axis (Step 5 broadcast)."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), params)
+
+
+def select_tree(mask_scalar, tree_true, tree_false):
+    """Per-device jnp.where over pytrees (straggler exclusion)."""
+    return jax.tree.map(
+        lambda a, b: jnp.where(mask_scalar.reshape((-1,) + (1,) * (a.ndim - 1)),
+                               a, b),
+        tree_true, tree_false)

@@ -1,0 +1,122 @@
+"""Host-side training engine: drives communication rounds with device
+scheduling, the wireless channel simulator, wall-clock accounting, and
+periodic evaluation. This is the paper's experimental harness (Figs 3-6).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ProtocolConfig
+from repro.core import protocol, fedgan
+from repro.core.channel import ChannelConfig, ChannelSimulator, round_wallclock
+from repro.core.scheduling import SchedulerState, schedule_round
+
+
+@dataclasses.dataclass
+class RoundRecord:
+    round: int
+    wallclock_s: float
+    cumulative_s: float
+    metrics: dict
+    fid: Optional[float] = None
+
+
+class Trainer:
+    """Runs the proposed protocol, FedGAN, or centralized training over a
+    simulated device fleet. All model math is jitted; scheduling and
+    channel timing are host-side numpy."""
+
+    def __init__(self, spec: protocol.GanModelSpec, pcfg: ProtocolConfig,
+                 init_fn: Callable, data_stacked, key, *,
+                 algorithm: str = "proposed",
+                 channel_cfg: Optional[ChannelConfig] = None,
+                 disc_step_flops: float = 1e9, gen_step_flops: float = 1e9):
+        self.spec, self.pcfg = spec, pcfg
+        self.algorithm = algorithm
+        self.key = key
+        self.data = data_stacked
+        self.n_devices = pcfg.n_devices
+        self.channel = ChannelSimulator(channel_cfg or ChannelConfig(
+            n_devices=pcfg.n_devices))
+        self.sched = SchedulerState(
+            policy=pcfg.scheduler, n_devices=pcfg.n_devices,
+            ratio=pcfg.scheduling_ratio)
+        self.rng = np.random.default_rng(0)
+        self.disc_step_flops = disc_step_flops
+        self.gen_step_flops = gen_step_flops
+
+        if algorithm == "fedgan":
+            self.state = fedgan.make_fedgan_state(key, init_fn, pcfg,
+                                                  self.n_devices)
+            self._round = jax.jit(
+                lambda s, d, w, k: fedgan.fedgan_round(spec, pcfg, s, d, w, k))
+        elif algorithm == "centralized":
+            self.state = protocol.make_train_state(key, init_fn, pcfg, 1)
+            pooled = jax.tree.map(
+                lambda x: x.reshape((-1,) + x.shape[2:]), data_stacked)
+            self._pooled = pooled
+            self._round = jax.jit(
+                lambda s, d, w, k: protocol.centralized_step(spec, pcfg, s, d, k))
+        else:
+            self.state = protocol.make_train_state(key, init_fn, pcfg,
+                                                   self.n_devices)
+            self._round = jax.jit(
+                lambda s, d, w, k: protocol.gan_round(spec, pcfg, s, d, w, k))
+
+        self._disc_nparams = sum(
+            int(x.size) for x in jax.tree_util.tree_leaves(self.state["disc"]))
+        self._gen_nparams = sum(
+            int(x.size) for x in jax.tree_util.tree_leaves(self.state["gen"]))
+        self.history: list[RoundRecord] = []
+        self._clock = 0.0
+
+    # ------------------------------------------------------------------
+    def run(self, n_rounds: int, *, eval_every: int = 0,
+            fid_fn: Optional[Callable] = None, verbose: bool = False):
+        for t in range(n_rounds):
+            round_key = jax.random.fold_in(self.key, t)
+
+            # Step 1: schedule + channel state
+            rates = self.channel.uplink_rates(self.sched.n_scheduled)
+            mask = schedule_round(self.sched, rates, self.rng)
+            timing = self.channel.round_timing(
+                mask=mask, disc_params=self._disc_nparams,
+                gen_params=self._gen_nparams,
+                disc_step_flops=self.disc_step_flops,
+                gen_step_flops=self.gen_step_flops,
+                n_d=self.pcfg.n_d, n_g=self.pcfg.n_g,
+                fedgan=self.algorithm == "fedgan")
+            active = mask & ~timing.stragglers
+            weights = jnp.asarray(
+                np.where(active, float(self.pcfg.sample_size), 0.0),
+                dtype=jnp.float32)
+
+            # Steps 2-5 (jitted)
+            data = self._pooled if self.algorithm == "centralized" else self.data
+            self.state, metrics = self._round(self.state, data, weights,
+                                              round_key)
+
+            wall = round_wallclock(timing, mask,
+                                   schedule=self.pcfg.schedule,
+                                   fedgan=self.algorithm == "fedgan")
+            self._clock += wall
+            fid = None
+            if fid_fn is not None and eval_every and (t + 1) % eval_every == 0:
+                fid = float(fid_fn(self.state["gen"],
+                                   jax.random.fold_in(self.key, 10_000 + t)))
+            rec = RoundRecord(t, wall, self._clock,
+                              {k: float(v) for k, v in metrics.items()}, fid)
+            self.history.append(rec)
+            if verbose:
+                msg = (f"round {t:4d}  t={self._clock:9.2f}s  "
+                       f"D={rec.metrics.get('disc_objective', float('nan')):+.4f}")
+                if fid is not None:
+                    msg += f"  FID={fid:8.2f}"
+                print(msg)
+        return self.history

@@ -1,0 +1,298 @@
+"""THE PAPER'S CONTRIBUTION — the distributed GAN training protocol.
+
+One communication round (Section II-B, Section III):
+
+  Step 1  server schedules S ⊆ K devices          (core.scheduling, host)
+  Step 2  scheduled devices run Algorithm 1 (n_d local discriminator SGD
+          steps); under the PARALLEL schedule the server simultaneously
+          runs Algorithm 3 from the same round-start parameters, with
+          shared-seed noise
+  Step 3  devices upload local discriminators     (16-bit, core.quantize)
+  Step 4  server averages them — Algorithm 2      (core.averaging)
+  Step 5  server broadcasts the global GAN
+  SERIAL schedule: Algorithm 3 runs after Step 4 against the fresh
+          global discriminator.
+
+`gan_round` is a pure jittable function: the paper's K devices appear as
+a stacked leading axis, so the SAME code runs (a) on CPU for the
+paper-scale experiments and (b) under pjit on the production mesh where
+the stacked axis is sharded over ("pod","data") and Algorithm 2's
+weighted mean lowers to the ICI all-reduce (DESIGN.md §2).
+
+The model is abstracted by `GanModelSpec`, so DCGAN (the paper's
+experiment) and every assigned backbone-GAN use one protocol
+implementation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ProtocolConfig
+from repro.core import losses
+from repro.core.averaging import weighted_average, broadcast_like
+from repro.optim import make_optimizer, apply_updates
+from repro.optim.optimizers import tree_add
+
+
+def _accumulated_grad(loss_fn, params, batch_axis_trees, total: int,
+                      micro: Optional[int]):
+    """value_and_grad with gradient accumulation over microbatches.
+
+    loss_fn(params, *slices) -> scalar mean loss over the slice.
+    batch_axis_trees: pytrees whose leaves have leading axis `total`,
+    sliced jointly into `total // micro` chunks.
+    """
+    if micro is None or micro >= total:
+        loss, grads = jax.value_and_grad(loss_fn)(params, *batch_axis_trees)
+        return loss, grads
+    assert total % micro == 0, f"micro {micro} must divide batch {total}"
+    n_chunks = total // micro
+
+    def chunk(i, tree):
+        return jax.tree.map(
+            lambda a: jax.lax.dynamic_slice_in_dim(a, i * micro, micro,
+                                                   axis=0), tree)
+
+    def body(carry, i):
+        loss_acc, grad_acc = carry
+        slices = [chunk(i, t) for t in batch_axis_trees]
+        loss, grads = jax.value_and_grad(loss_fn)(params, *slices)
+        return (loss_acc + loss, tree_add(grad_acc, grads)), None
+
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    (loss_sum, grad_sum), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), zeros), jnp.arange(n_chunks))
+    scale = 1.0 / n_chunks
+    return loss_sum * scale, jax.tree.map(lambda g: g * scale, grad_sum)
+
+# PRNG salts: the SHARED noise stream (paper: "identical pseudo random
+# sequence" between server and devices) vs device-private data sampling.
+_SALT_SHARED_Z = 0x5EED
+_SALT_DATA = 0xDA7A
+
+
+@dataclasses.dataclass(frozen=True)
+class GanModelSpec:
+    """Adapter between the protocol and a concrete (G, D) pair.
+
+    sample_z(key, n)                 -> noise batch
+    gen_apply(gen_params, z)         -> fake data batch
+    disc_real(disc_params, batch)    -> logits (n,) on real data
+    disc_fake(disc_params, fake)     -> logits (n,) on generated data
+    """
+    sample_z: Callable
+    gen_apply: Callable
+    disc_real: Callable
+    disc_fake: Callable
+    gen_loss_variant: str = "minimax"
+
+
+def make_train_state(key, init_fn, pcfg: ProtocolConfig, n_devices: int):
+    """init_fn(key) -> {"gen": ..., "disc": ...}."""
+    params = init_fn(key)
+    gen_opt = make_optimizer(pcfg.optimizer, pcfg.lr_g).init(params["gen"])
+    disc_opt_one = make_optimizer(pcfg.optimizer, pcfg.lr_d).init(params["disc"])
+    # per-device local optimizer state (persists locally, never averaged)
+    disc_opt = broadcast_like(disc_opt_one, n_devices)
+    return {"gen": params["gen"], "disc": params["disc"],
+            "gen_opt": gen_opt, "disc_opt": disc_opt}
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 — device k's update
+# ---------------------------------------------------------------------------
+
+def device_update(spec: GanModelSpec, pcfg: ProtocolConfig, gen_params,
+                  disc_params, disc_opt, data_local, round_key, dev_index):
+    """n_d mini-batch steps ascending eq (2) on the LOCAL data shard.
+
+    data_local: pytree with leading axis n_k (the device's private data).
+    Fresh samples each step (Algorithm 1 line 5): m_k indices drawn with
+    replacement from the local shard; noise from the SHARED stream.
+    """
+    n_local = jax.tree_util.tree_leaves(data_local)[0].shape[0]
+    m = pcfg.sample_size
+    opt = make_optimizer(pcfg.optimizer, pcfg.lr_d)
+
+    def one_step(carry, j):
+        disc, opt_state = carry
+        kz = jax.random.fold_in(jax.random.fold_in(round_key, _SALT_SHARED_Z), j)
+        kx = jax.random.fold_in(
+            jax.random.fold_in(jax.random.fold_in(round_key, _SALT_DATA),
+                               dev_index), j)
+        idx = jax.random.randint(kx, (m,), 0, n_local)
+        x = jax.tree.map(lambda a: jnp.take(a, idx, axis=0), data_local)
+        z = spec.sample_z(kz, m)
+        fake = spec.gen_apply(gen_params, z)      # round-start theta
+
+        def neg_obj(phi, x_mb, fake_mb):
+            return -losses.disc_objective(spec.disc_real(phi, x_mb),
+                                          spec.disc_fake(phi, fake_mb))
+
+        loss, grads = _accumulated_grad(neg_obj, disc, [x, fake], m,
+                                        pcfg.micro_batch_d)
+        updates, opt_state = opt.update(grads, opt_state, disc)
+        disc = apply_updates(disc, updates)       # eq (3): ascent on eq (2)
+        return (disc, opt_state), -loss
+
+    (disc, opt_state), objs = jax.lax.scan(
+        one_step, (disc_params, disc_opt), jnp.arange(pcfg.n_d))
+    return disc, opt_state, objs[-1]
+
+
+def devices_round_hoisted(spec: GanModelSpec, pcfg: ProtocolConfig,
+                          gen_params, disc_stacked, disc_opt_stacked,
+                          data_stacked, round_key):
+    """Algorithm 1 for ALL devices with the fake batch HOISTED.
+
+    The shared noise stream (Section III-A) makes every device's fake
+    batch at local step j identical, so G(theta, z_j) runs ONCE per step
+    — batch-shardable over the device axes — instead of once per device.
+    Bitwise-identical math to the vmapped path; K x fewer generator
+    forwards. Loop order becomes scan-over-steps(vmap-over-devices).
+    """
+    n_devices = jax.tree_util.tree_leaves(data_stacked)[0].shape[0]
+    n_local = jax.tree_util.tree_leaves(data_stacked)[0].shape[1]
+    m = pcfg.sample_size
+    opt = make_optimizer(pcfg.optimizer, pcfg.lr_d)
+
+    def one_step(carry, j):
+        discs, opts = carry
+        kz = jax.random.fold_in(jax.random.fold_in(round_key, _SALT_SHARED_Z), j)
+        z = spec.sample_z(kz, m)
+        fake = spec.gen_apply(gen_params, z)      # once, for every device
+
+        def one_device(disc, opt_state, data_local, dev_index):
+            kx = jax.random.fold_in(
+                jax.random.fold_in(jax.random.fold_in(round_key, _SALT_DATA),
+                                   dev_index), j)
+            idx = jax.random.randint(kx, (m,), 0, n_local)
+            x = jax.tree.map(lambda a: jnp.take(a, idx, axis=0), data_local)
+
+            def neg_obj(phi, x_mb, fake_mb):
+                return -losses.disc_objective(spec.disc_real(phi, x_mb),
+                                              spec.disc_fake(phi, fake_mb))
+
+            loss, grads = _accumulated_grad(neg_obj, disc, [x, fake], m,
+                                            pcfg.micro_batch_d)
+            updates, opt_state = opt.update(grads, opt_state, disc)
+            return apply_updates(disc, updates), opt_state, -loss
+
+        discs, opts, objs = jax.vmap(one_device, in_axes=(0, 0, 0, 0))(
+            discs, opts, data_stacked, jnp.arange(n_devices))
+        return (discs, opts), objs
+
+    (discs, opts), objs = jax.lax.scan(
+        one_step, (disc_stacked, disc_opt_stacked), jnp.arange(pcfg.n_d))
+    return discs, opts, objs[-1]
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 3 — server generator update
+# ---------------------------------------------------------------------------
+
+def server_update(spec: GanModelSpec, pcfg: ProtocolConfig, gen_params,
+                  gen_opt, disc_params, round_key):
+    """n_g steps descending eq (1) against the given discriminator.
+    Uses the SAME shared noise stream as the devices (parallel-schedule
+    seed consistency, Section III-A)."""
+    M = pcfg.server_sample_size
+    opt = make_optimizer(pcfg.optimizer, pcfg.lr_g)
+
+    def one_step(carry, j):
+        gen, opt_state = carry
+        kz = jax.random.fold_in(jax.random.fold_in(round_key, _SALT_SHARED_Z), j)
+        z = spec.sample_z(kz, M)
+
+        def obj(theta, z_mb):
+            fake = spec.gen_apply(theta, z_mb)
+            return losses.gen_objective(spec.disc_fake(disc_params, fake),
+                                        variant=spec.gen_loss_variant)
+
+        loss, grads = _accumulated_grad(obj, gen, [z], M, pcfg.micro_batch_g)
+        updates, opt_state = opt.update(grads, opt_state, gen)
+        gen = apply_updates(gen, updates)         # eq (4): descent on eq (1)
+        return (gen, opt_state), loss
+
+    (gen, gen_opt), objs = jax.lax.scan(
+        one_step, (gen_params, gen_opt), jnp.arange(pcfg.n_g))
+    return gen, gen_opt, objs[-1]
+
+
+# ---------------------------------------------------------------------------
+# One communication round (Steps 1–5)
+# ---------------------------------------------------------------------------
+
+def gan_round(spec: GanModelSpec, pcfg: ProtocolConfig, state, data_stacked,
+              weights, round_key, *, constrain_stacked=None):
+    """One full round.
+
+    state: {"gen", "disc", "gen_opt", "disc_opt"} — disc/disc_opt are the
+           GLOBAL discriminator (post-broadcast) and the per-device local
+           optimizer states (stacked K).
+    data_stacked: pytree, leading axes (K, n_k, ...) — device-private shards.
+    weights: (K,) — m_k for scheduled devices, 0 otherwise (Step 1 output;
+           also encodes straggler exclusion, footnote 1).
+    Returns (new_state, metrics).
+    """
+    n_devices = weights.shape[0]
+    disc_stacked = broadcast_like(state["disc"], n_devices)  # Step 5 (prev)
+    if constrain_stacked is not None:
+        # pjit path: pin the per-device replicas to the device mesh axes so
+        # GSPMD keeps Algorithm 1 embarrassingly parallel.
+        disc_stacked = constrain_stacked(disc_stacked)
+
+    # Step 2 — Algorithm 1 on every device slice (vmapped; on the pod mesh
+    # the stacked axis is sharded so each slice computes only its own).
+    if pcfg.hoist_fakes:
+        new_discs, new_disc_opt, disc_objs = devices_round_hoisted(
+            spec, pcfg, state["gen"], disc_stacked, state["disc_opt"],
+            data_stacked, round_key)
+    else:
+        dev_fn = jax.vmap(
+            lambda d, o, x, i: device_update(spec, pcfg, state["gen"], d, o,
+                                             x, round_key, i),
+            in_axes=(0, 0, 0, 0))
+        new_discs, new_disc_opt, disc_objs = dev_fn(
+            disc_stacked, state["disc_opt"], data_stacked,
+            jnp.arange(n_devices))
+
+    # Steps 3–4 — Algorithm 2: weighted averaging (the uplink collective).
+    disc_avg = weighted_average(new_discs, weights)
+
+    # Algorithm 3 — serial: against fresh phi^{t+1}; parallel: against the
+    # round-start phi^t, dataflow-independent of the averaging collective.
+    disc_for_gen = disc_avg if pcfg.schedule == "serial" else state["disc"]
+    new_gen, new_gen_opt, gen_obj = server_update(
+        spec, pcfg, state["gen"], state["gen_opt"], disc_for_gen, round_key)
+
+    w = weights.astype(jnp.float32)
+    wsum = jnp.maximum(w.sum(), 1e-12)
+    metrics = {
+        "disc_objective": jnp.sum(disc_objs * w) / wsum,
+        "gen_objective": gen_obj,
+        "participation": (w > 0).astype(jnp.float32).mean(),
+    }
+    new_state = {"gen": new_gen, "disc": disc_avg,
+                 "gen_opt": new_gen_opt, "disc_opt": new_disc_opt}
+    return new_state, metrics
+
+
+def centralized_step(spec: GanModelSpec, pcfg: ProtocolConfig, state, data,
+                     round_key):
+    """Centralized baseline (Fig. 4): one worker, same budget — n_d
+    discriminator steps on the pooled data then n_g generator steps."""
+    disc, disc_opt, disc_obj = device_update(
+        spec, pcfg, state["gen"], state["disc"],
+        jax.tree.map(lambda x: x[0], state["disc_opt"]), data, round_key,
+        jnp.int32(0))
+    gen, gen_opt, gen_obj = server_update(
+        spec, pcfg, state["gen"], state["gen_opt"], disc, round_key)
+    new_state = {"gen": gen, "disc": disc, "gen_opt": gen_opt,
+                 "disc_opt": jax.tree.map(lambda x: x[None], disc_opt)}
+    return new_state, {"disc_objective": disc_obj, "gen_objective": gen_obj,
+                       "participation": jnp.float32(1.0)}

@@ -1,0 +1,50 @@
+"""Uplink quantization (paper Section IV: 16 bits per parameter).
+
+Uniform stochastic quantization with a per-tensor scale. With the
+default 16 bits the quantization error is negligible (matching the
+paper's implicit assumption); lower bit widths are exposed for
+communication-efficiency ablations.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_tree(key, tree, bits: int = 16):
+    """Returns (quantized_int_tree, scales_tree)."""
+    levels = 2 ** (bits - 1) - 1
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+
+    q_leaves, scales = [], []
+    for k, x in zip(keys, leaves):
+        scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / levels
+        scaled = x / scale
+        low = jnp.floor(scaled)
+        p_up = scaled - low
+        rnd = jax.random.uniform(k, x.shape)
+        q = low + (rnd < p_up)
+        q_leaves.append(jnp.clip(q, -levels - 1, levels).astype(jnp.int32))
+        scales.append(scale)
+    return (jax.tree_util.tree_unflatten(treedef, q_leaves),
+            jax.tree_util.tree_unflatten(treedef, scales))
+
+
+def dequantize_tree(q_tree, scales_tree):
+    return jax.tree.map(lambda q, s: q.astype(jnp.float32) * s,
+                        q_tree, scales_tree)
+
+
+def roundtrip(key, tree, bits: int = 16):
+    """Quantize-dequantize (what the server receives on the uplink)."""
+    if bits >= 32:
+        return tree
+    q, s = quantize_tree(key, tree, bits)
+    deq = dequantize_tree(q, s)
+    return jax.tree.map(lambda d, x: d.astype(x.dtype), deq, tree)
+
+
+def tree_bits(tree, bits: int = 16) -> int:
+    """Total uplink payload in bits for a parameter pytree."""
+    return bits * sum(int(x.size) for x in jax.tree_util.tree_leaves(tree))

@@ -1,0 +1,98 @@
+"""Manual-collective (shard_map) implementation of one protocol round.
+
+The pjit path (core.protocol.gan_round) expresses the paper's K devices
+as a stacked leading axis and lets GSPMD insert the averaging
+all-reduce. This module expresses the SAME round with explicit
+`jax.lax.psum` collectives under `jax.shard_map`: every mesh slice IS a
+device — local discriminator steps touch no collective (Algorithm 1 is
+embarrassingly parallel), Algorithm 2 is a weighted psum, and the server
+update is replicated shared-seed computation (the paper's single server
+maps to identical per-slice generator math — no gradient collective is
+needed because the shared noise makes every slice compute the same
+update).
+
+Used by tests to prove the two paths agree bit-for-bit on a host mesh,
+and by the §Perf hillclimb to compare collective schedules.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ProtocolConfig
+from repro.core.protocol import GanModelSpec, device_update, server_update
+from repro.core.averaging import weighted_average_psum
+
+
+def shard_map_round(spec: GanModelSpec, pcfg: ProtocolConfig, mesh,
+                    device_axes=("data",)):
+    """Build a jitted round function over `mesh` with explicit collectives.
+
+    Expects state["disc_opt"]/data/weights stacked over the device axes
+    (leading K == prod of device-axis sizes).
+    """
+    axis = device_axes
+
+    def round_body(state, data_local, weight_local, round_key):
+        # inside shard_map: leading stacked axis has local size 1
+        my_index = jax.lax.axis_index(axis)
+        data_k = jax.tree.map(lambda x: x[0], data_local)
+        disc_opt_k = jax.tree.map(lambda x: x[0], state["disc_opt"])
+        w_k = weight_local[0]
+
+        disc_k, disc_opt_k, disc_obj = device_update(
+            spec, pcfg, state["gen"], state["disc"], disc_opt_k, data_k,
+            round_key, my_index)
+
+        # Algorithm 2 as an explicit weighted psum over the device axes.
+        disc_avg = weighted_average_psum(disc_k, w_k, axis_names=axis)
+
+        disc_for_gen = disc_avg if pcfg.schedule == "serial" else state["disc"]
+        gen, gen_opt, gen_obj = server_update(
+            spec, pcfg, state["gen"], state["gen_opt"], disc_for_gen,
+            round_key)
+
+        w = w_k.astype(jnp.float32)
+        wsum = jnp.maximum(jax.lax.psum(w, axis), 1e-12)
+        metrics = {
+            "disc_objective": jax.lax.psum(disc_obj * w, axis) / wsum,
+            "gen_objective": gen_obj,
+            "participation": jax.lax.pmean((w > 0).astype(jnp.float32), axis),
+        }
+        new_state = {
+            "gen": gen, "disc": disc_avg, "gen_opt": gen_opt,
+            "disc_opt": jax.tree.map(lambda x: x[None], disc_opt_k),
+        }
+        return new_state, metrics
+
+    stacked = P(device_axes)
+    rep = P()
+    state_specs = {"gen": rep, "disc": rep, "gen_opt": rep,
+                   "disc_opt": stacked}
+
+    def make_specs(tree, spec_leaf):
+        return jax.tree.map(lambda _: spec_leaf, tree,
+                            is_leaf=lambda x: x is None)
+
+    def run(state, data_stacked, weights, round_key):
+        in_specs = (
+            {k: make_specs(state[k], v) for k, v in state_specs.items()},
+            make_specs(data_stacked, stacked),
+            stacked,
+            rep,
+        )
+        out_specs = (
+            {"gen": make_specs(state["gen"], rep),
+             "disc": make_specs(state["disc"], rep),
+             "gen_opt": make_specs(state["gen_opt"], rep),
+             "disc_opt": make_specs(state["disc_opt"], stacked)},
+            {"disc_objective": rep, "gen_objective": rep, "participation": rep},
+        )
+        fn = jax.shard_map(round_body, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, check_vma=False)
+        return jax.jit(fn)(state, data_stacked, weights, round_key)
+
+    return run

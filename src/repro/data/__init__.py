@@ -1,0 +1,6 @@
+from repro.data.synthetic import (
+    make_image_dataset,
+    make_token_dataset,
+    DATASET_SPECS,
+)
+from repro.data.partition import partition_iid, partition_dirichlet, partition

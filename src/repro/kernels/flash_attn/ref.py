@@ -1,0 +1,30 @@
+"""Oracle for the flash_attn kernel: the (grad-tested) blockwise jnp
+implementation, plus a naive softmax for cross-checks."""
+import jax
+import jax.numpy as jnp
+
+from repro.nn.flash_ref import flash_attention_ref, _block_bias
+
+
+def flash_ref(q, k, v, *, scale, causal=True, window=None):
+    """q (BH, SQ, D); k/v (BH, SK, D); q row r at absolute position
+    SK - SQ + r (suffix alignment, matching the kernel wrapper)."""
+    bh, sq, _ = q.shape
+    sk = k.shape[1]
+    q_pos = jnp.broadcast_to(jnp.arange(sk - sq, sk), (bh, sq))
+    k_pos = jnp.broadcast_to(jnp.arange(sk), (bh, sk))
+    return flash_attention_ref(q, k, v, q_pos, k_pos, None, scale,
+                               causal, window, 512, False)
+
+
+def naive_ref(q, k, v, *, scale, causal=True, window=None):
+    bh, sq, _ = q.shape
+    sk = k.shape[1]
+    q_pos = jnp.broadcast_to(jnp.arange(sk - sq, sk), (bh, sq))
+    k_pos = jnp.broadcast_to(jnp.arange(sk), (bh, sk))
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    s = s + _block_bias(q_pos, k_pos, causal, window, None)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

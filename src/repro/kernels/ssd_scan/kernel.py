@@ -1,0 +1,112 @@
+"""Mamba-2 SSD chunked scan as a Pallas TPU kernel.
+
+Per (batch*head) program, the sequence is processed in chunks of L
+tokens. Within a chunk the quadratic ("attention-like") term runs on
+the MXU; across chunks the state (n, p) recurrence is carried in a VMEM
+scratch accumulator. The TPU grid is iterated sequentially with the
+chunk axis innermost, so the scratch state persists across chunk steps
+of the same (batch*head) program — the canonical Pallas TPU carry
+pattern.
+
+Layouts (prepared by ops.py):
+  x   (BH, S, P)    per-head inputs
+  dt  (BH, S)       softplus'd step sizes
+  a   (BH, S)       dt * A  (decay log-rates, negative)
+  B   (BH, S, N)    input projections  (groups pre-expanded)
+  C   (BH, S, N)    output projections
+  y   (BH, S, P)    outputs
+  state_out (BH, N, P) final states (for prefill -> decode handoff)
+
+Chunk L=128 and P(head_dim)=64..128, N(d_state)=64..128 keep every
+block MXU-shaped (multiples of 8x128 tiles after f32 promotion).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_out_ref,
+                state_ref):
+    j = pl.program_id(1)                     # chunk index (innermost)
+    nc = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0].astype(jnp.float32)         # (L, P)
+    dt = dt_ref[0].astype(jnp.float32)       # (L,)
+    a = a_ref[0].astype(jnp.float32)         # (L,)
+    B = b_ref[0].astype(jnp.float32)         # (L, N)
+    C = c_ref[0].astype(jnp.float32)         # (L, N)
+
+    L = x.shape[0]
+    xdt = x * dt[:, None]
+    cs = jnp.cumsum(a)                       # (L,)
+
+    # within-chunk quadratic term: S_il = (C_i . B_l) exp(cs_i - cs_l), l<=i
+    scores = jnp.dot(C, B.T, preferred_element_type=jnp.float32)  # (L, L)
+    seg = cs[:, None] - cs[None, :]
+    causal = (jnp.arange(L)[:, None] >= jnp.arange(L)[None, :])
+    decay_mat = jnp.where(causal, jnp.exp(seg), 0.0)
+    y = jnp.dot(scores * decay_mat, xdt,
+                preferred_element_type=jnp.float32)               # (L, P)
+
+    # contribution of the carried state: y_i += exp(cs_i) C_i . state
+    state = state_ref[...].astype(jnp.float32)                    # (N, P)
+    y = y + jnp.exp(cs)[:, None] * jnp.dot(
+        C, state, preferred_element_type=jnp.float32)
+
+    # state update: state' = exp(cs_L) state + sum_l exp(cs_L - cs_l) B_l xdt_l
+    total = cs[-1]
+    decay_states = jnp.exp(total - cs)                            # (L,)
+    new_state = jnp.exp(total) * state + jnp.dot(
+        (B * decay_states[:, None]).T, xdt,
+        preferred_element_type=jnp.float32)                       # (N, P)
+    state_ref[...] = new_state
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(j == nc - 1)
+    def _emit_state():
+        state_out_ref[0] = new_state.astype(state_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_pallas(x, dt, a, B, C, *, chunk: int = 128,
+                    interpret: bool = False):
+    """Returns (y (BH,S,P), final_state (BH,N,P)). S % chunk == 0
+    (ops.py pads)."""
+    bh, s, p = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0
+    nc = s // chunk
+    grid = (bh, nc)
+
+    y, state_out = pl.pallas_call(
+        _ssd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda i, j: (i, j, 0)),   # x
+            pl.BlockSpec((1, chunk), lambda i, j: (i, j)),         # dt
+            pl.BlockSpec((1, chunk), lambda i, j: (i, j)),         # a
+            pl.BlockSpec((1, chunk, n), lambda i, j: (i, j, 0)),   # B
+            pl.BlockSpec((1, chunk, n), lambda i, j: (i, j, 0)),   # C
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, p), lambda i, j: (i, j, 0)),   # y
+            pl.BlockSpec((1, n, p), lambda i, j: (i, 0, 0)),       # state
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, p), x.dtype),
+            jax.ShapeDtypeStruct((bh, n, p), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, B, C)
+    return y, state_out

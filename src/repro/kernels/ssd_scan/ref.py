@@ -1,0 +1,32 @@
+"""Oracle for the ssd_scan kernel: the (tested) pure-jnp chunked scan."""
+import jax.numpy as jnp
+
+from repro.nn.ssm import ssd_scan_ref
+
+
+def ssd_ref(x, dt, a, B, C, *, chunk: int = 128):
+    """Kernel layout (BH, S, ...) -> same, via the nn reference.
+
+    a = dt * A is already folded, so pass A=a/dt through a rearranged
+    call: we reconstruct by calling the reference with per-head A folded
+    into dt (the reference multiplies dt*A itself, so give it A=-1 and
+    dt=-a ... simpler: inline the recurrence here).
+    """
+    bh, s, p = x.shape
+    n = B.shape[-1]
+    # naive sequential recurrence in f64-ish f32
+    state = jnp.zeros((bh, n, p), jnp.float32)
+    ys = []
+    xf = x.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    for t in range(s):
+        decay = jnp.exp(af[:, t])                                  # (BH,)
+        outer = jnp.einsum("bn,bp->bnp", Bf[:, t],
+                           xf[:, t] * dtf[:, t, None])
+        state = decay[:, None, None] * state + outer
+        ys.append(jnp.einsum("bn,bnp->bp", Cf[:, t], state))
+    y = jnp.stack(ys, axis=1).astype(x.dtype)
+    return y, state

@@ -1,0 +1,1 @@
+from repro.kernels.wavg import ops, ref

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the wavg kernel."""
+import jax.numpy as jnp
+
+
+def wavg_ref(x, w):
+    """x: (K, N), w: (K,) normalized -> (N,) in x.dtype, f32 accumulate."""
+    return jnp.einsum("k,kn->n", w.astype(jnp.float32),
+                      x.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,170 @@
+"""Compiled-artifact analysis: roofline terms from the dry-run.
+
+Hardware constants (TPU v5e targets, per the task statement):
+  197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+collective_bytes is not in cost_analysis(): we parse the optimized HLO,
+build an instruction -> shape table, and sum operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+All-reduce is counted twice (reduce-scatter + all-gather equivalent on a
+ring).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+PEAK_FLOPS = 197e12         # bf16 / chip
+HBM_BW = 819e9              # bytes/s / chip
+ICI_BW = 50e9               # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "opaque": 0,
+}
+
+# `%name = bf16[1,2,3]{...}` or tuple results `(bf16[..], f32[..])`
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+"
+                       r"([\w\-]+)\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Sum of operand bytes per collective kind (whole-program logical
+    bytes; see module docstring for the all-reduce convention)."""
+    # instruction result shapes (for operand lookup)
+    shapes: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, type_str, _op = m.groups()
+        shapes[name] = _shape_bytes(type_str)
+
+    per_kind: dict[str, float] = defaultdict(float)
+    counts: dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, type_str, op = m.groups()
+        kind = next((c for c in COLLECTIVES if op.startswith(c)), None)
+        if kind is None or op.endswith("-start") and False:
+            continue
+        if op.endswith("-done"):
+            continue   # async pair: count the -start only
+        # operand list: %arg names inside the call parens
+        operands = re.findall(r"%([\w.\-]+)", line.split("(", 1)[1])
+        op_bytes = sum(shapes.get(o, 0) for o in operands)
+        if op_bytes == 0:
+            op_bytes = _shape_bytes(type_str)   # fallback: result shape
+        if kind == "all-gather":
+            # operand is the shard; traffic ~ gathered result
+            op_bytes = max(op_bytes, _shape_bytes(type_str))
+        if kind == "all-reduce":
+            op_bytes *= 2
+        per_kind[kind] += op_bytes
+        counts[kind] += 1
+    return {"bytes_by_kind": dict(per_kind),
+            "counts": dict(counts),
+            "total_bytes": float(sum(per_kind.values()))}
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    n_chips: int
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / (self.n_chips * PEAK_FLOPS)
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / (self.n_chips * HBM_BW)
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / (self.n_chips * ICI_BW)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": self.collective_bytes,
+            "n_chips": self.n_chips,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+        }
+
+
+def analyze_compiled(compiled, n_chips: int) -> dict:
+    from repro.launch.hlo_costs import hlo_costs
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    text = compiled.as_text()
+    # loop-aware costs (xla cost_analysis counts while bodies once).
+    # The SPMD module is the PER-DEVICE program (shard shapes), so scale
+    # by n_chips to get global quantities for the roofline formulas.
+    lc = hlo_costs(text)
+    coll = {"bytes_by_kind": {k: v * n_chips
+                              for k, v in lc["bytes_by_kind"].items()},
+            "counts": lc["counts"],
+            "total_bytes": lc["collective_bytes"] * n_chips,
+            "raw_uncorrected": parse_collective_bytes(text)["total_bytes"]
+            * n_chips}
+    roof = Roofline(flops=lc["flops"] * n_chips,
+                    hbm_bytes=lc["hbm_bytes"] * n_chips,
+                    collective_bytes=lc["collective_bytes"] * n_chips,
+                    n_chips=n_chips)
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "peak_bytes": int(mem.argument_size_in_bytes
+                              + mem.temp_size_in_bytes),
+        }
+    except Exception as e:  # backend-dependent
+        mem_info = {"error": str(e)}
+    return {"roofline": roof.as_dict(), "collectives": coll,
+            "memory": mem_info,
+            "xla_cost_analysis_raw": {
+                # while bodies counted once — kept for reference only
+                "flops": float(cost.get("flops", 0.0)),
+                "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+            }}
+
+
+def model_flops_per_round(n_params_active: int, tokens: int) -> float:
+    """MODEL_FLOPS = 6 * N * D (dense) with N = active params."""
+    return 6.0 * n_params_active * tokens

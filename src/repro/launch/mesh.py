@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (device count is locked at first jax init; dryrun.py sets
+XLA_FLAGS before importing anything).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(shape)))
+
+
+def make_host_mesh(n_data: int = 1, n_model: int = 1):
+    """Small mesh over host devices for CPU tests (requires
+    XLA_FLAGS=--xla_force_host_platform_device_count set by the caller)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"),
+                         axis_types=_auto(2))
+
+
+def device_axes(multi_pod: bool):
+    """Mesh axes that play the paper's K devices."""
+    return ("pod", "data") if multi_pod else ("data",)

@@ -1,0 +1,266 @@
+"""Step builders for the production mesh: one protocol training round,
+serving prefill, and serving decode — each returning the jitted function
+plus abstract inputs (ShapeDtypeStruct) and shardings, so launch/dryrun.py
+can `.lower().compile()` every (architecture x input shape x mesh)
+without allocating anything.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (ArchConfig, MeshConfig, ProtocolConfig,
+                                ShapeConfig)
+from repro.core import protocol
+from repro.models import gan as gan_model
+from repro.models.backbone import init_decode_caches
+from repro.models.specs import make_backbone_spec
+from repro.sharding import rules
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def _bf16_floats(tree):
+    def cast(x):
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating):
+            return jax.ShapeDtypeStruct(x.shape, COMPUTE_DTYPE)
+        return jax.ShapeDtypeStruct(x.shape, x.dtype)
+    return jax.tree.map(cast, tree)
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def needs_enc(cfg: ArchConfig) -> bool:
+    return cfg.family in ("encdec", "vlm")
+
+
+# per-chip budget for remat carries on the discriminator path (bf16)
+_CARRY_BUDGET_BYTES = 1.5e9
+
+
+def _pick_micro_d(cfg: ArchConfig, m: int, seq: int):
+    """Largest divisor of m whose depth-stacked remat carry fits budget."""
+    from repro.models.gan import disc_config
+    dcfg = disc_config(cfg)
+    n_groups = dcfg.n_groups_stack
+    per_sample = n_groups * seq * cfg.d_model * 2  # bf16 carry per group
+    best = 1
+    for micro in range(1, m + 1):
+        if m % micro == 0 and micro * per_sample <= _CARRY_BUDGET_BYTES:
+            best = micro
+    return None if best == m else best
+
+
+def _enc_len(cfg: ArchConfig) -> int:
+    return cfg.enc_seq if cfg.family == "encdec" else cfg.n_image_tokens
+
+
+# ---------------------------------------------------------------------------
+# Training round
+# ---------------------------------------------------------------------------
+
+def build_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                     mesh_cfg: MeshConfig,
+                     pcfg: Optional[ProtocolConfig] = None,
+                     schedule: str = "serial",
+                     pcfg_overrides: Optional[dict] = None,
+                     act_disc_spec: Optional[object] = "default"):
+    """The protocol round as the pod-scale train step.
+
+    The paper's K devices = the mesh's device axes (pod x data slices).
+    global_batch rows of real data are the per-round union of local
+    samples: K * n_k = global_batch.
+    """
+    plan = rules.plan_for(cfg, mesh_cfg)
+    k_dev = math.prod(mesh.shape[a] for a in plan.dev_axes)
+    assert shape.global_batch % k_dev == 0
+    n_k = shape.global_batch // k_dev
+    seq = shape.seq_len
+    if pcfg is None:
+        # Server sample size M = K_dev so the generator update ("the
+        # distributed server") batch-shards exactly over the device axes.
+        # Microbatching (gradient accumulation) caps remat-carry memory
+        # at disc_depth x micro x seq x d_model per chip.
+        pcfg = ProtocolConfig(
+            n_devices=k_dev, n_d=5, n_g=5,
+            sample_size=n_k, server_sample_size=k_dev,
+            micro_batch_d=_pick_micro_d(cfg, n_k, seq),
+            schedule=schedule)
+    if pcfg_overrides:
+        pcfg = dataclasses.replace(pcfg, **pcfg_overrides)
+
+    enc = needs_enc(cfg)
+
+    stacked_disc_specs = None  # filled after abstract init
+
+    # Generator activations batch-shard over the device axes (M = K_dev);
+    # discriminator activations stay batch-local to their device group
+    # (heads/ff spread over `model` by the param rules), with microbatched
+    # gradient accumulation bounding the remat carries.
+    act_gen = P(plan.dev_axes, None, None)
+    act_disc = None if act_disc_spec == "default" else act_disc_spec
+
+    def train_step(state, batch, weights, seed):
+        round_key = jax.random.PRNGKey(seed)
+        enc_feats = batch.get("enc_feats")
+        spec = make_backbone_spec(
+            cfg, seq,
+            enc_feats_fn=(lambda n: enc_feats[:n]) if enc else None,
+            act_spec_gen=act_gen, act_spec_disc=act_disc,
+            dtype=COMPUTE_DTYPE)
+        constrain = None
+        if stacked_disc_specs is not None:
+            constrain = lambda tree: jax.lax.with_sharding_constraint(
+                tree, _named(mesh, stacked_disc_specs))
+        return protocol.gan_round(spec, pcfg, state, batch["tokens"],
+                                  weights, round_key,
+                                  constrain_stacked=constrain)
+
+    # ---- abstract state & inputs -------------------------------------
+    def init_fn(key):
+        return gan_model.gan_init(key, cfg)
+
+    state_abs = jax.eval_shape(
+        lambda: protocol.make_train_state(jax.random.PRNGKey(0), init_fn,
+                                          pcfg, k_dev))
+    state_abs = _bf16_floats(state_abs)
+
+    batch_abs = {"tokens": jax.ShapeDtypeStruct((k_dev, n_k, seq), jnp.int32)}
+    if enc:
+        m = max(pcfg.sample_size, pcfg.server_sample_size)
+        batch_abs["enc_feats"] = jax.ShapeDtypeStruct(
+            (m, _enc_len(cfg), cfg.d_model), COMPUTE_DTYPE)
+    weights_abs = jax.ShapeDtypeStruct((k_dev,), jnp.float32)
+    seed_abs = jax.ShapeDtypeStruct((), jnp.int32)
+
+    state_sp = rules.state_specs(state_abs, mesh, plan,
+                                 gen_fsdp=plan.fsdp_axes is not None)
+    stacked_disc_specs = jax.tree.map(
+        lambda s: P(plan.dev_axes, *s),
+        rules.param_specs(state_abs["disc"], mesh, plan),
+        is_leaf=lambda s: isinstance(s, P))
+
+    batch_sp = {"tokens": rules.data_spec(plan)}
+    if enc:
+        batch_sp["enc_feats"] = rules.enc_feats_spec(cfg, mesh, plan)
+    in_shardings = (_named(mesh, state_sp), _named(mesh, batch_sp),
+                    NamedSharding(mesh, P()), NamedSharding(mesh, P()))
+    out_shardings = (_named(mesh, state_sp), None)
+
+    step = jax.jit(train_step, in_shardings=in_shardings,
+                   out_shardings=out_shardings)
+    args = (state_abs, batch_abs, weights_abs, seed_abs)
+    return step, args
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill
+# ---------------------------------------------------------------------------
+
+def build_prefill_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                       mesh_cfg: MeshConfig):
+    plan = rules.plan_for(cfg, mesh_cfg)
+    b, s = shape.global_batch, shape.seq_len
+    enc = needs_enc(cfg)
+
+    def prefill_step(gen_params, batch):
+        out = gan_model.generator_lm_apply(
+            gen_params, cfg, batch["tokens"], mode="prefill",
+            enc_feats=batch.get("enc_feats"), remat=False,
+            prefill_cache_len=s)
+        # last-position logits only (next-token) — standard prefill output
+        logits = out["logits"][:, -1, :]
+        return logits, out["caches"]
+
+    gen_abs = _bf16_floats(jax.eval_shape(
+        lambda: gan_model.generator_init(jax.random.PRNGKey(0), cfg)))
+    batch_abs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if enc:
+        batch_abs["enc_feats"] = jax.ShapeDtypeStruct(
+            (b, _enc_len(cfg), cfg.d_model), COMPUTE_DTYPE)
+
+    # big generators 2D-shard weights over (data x model) for serving —
+    # GSPMD contracts the sharded dim with a small-activation all-reduce
+    gen_sp = rules.param_specs(gen_abs, mesh, plan,
+                               fsdp=plan.fsdp_axes is not None)
+    dev = plan.dev_axes
+    tok_sp = P(dev) if b % math.prod(mesh.shape[a] for a in dev) == 0 else P()
+    batch_sp = {"tokens": tok_sp}
+    if enc:
+        batch_sp["enc_feats"] = P(tok_sp[0] if tok_sp else None)
+
+    caches_abs = jax.eval_shape(
+        lambda: init_decode_caches(cfg, b, s, dtype=COMPUTE_DTYPE))
+    cache_sp = rules.cache_specs(cfg, caches_abs, b, mesh, plan)
+
+    in_shardings = (_named(mesh, gen_sp), _named(mesh, batch_sp))
+    out_shardings = (None, _named(mesh, cache_sp))
+    step = jax.jit(prefill_step, in_shardings=in_shardings,
+                   out_shardings=out_shardings)
+    return step, (gen_abs, batch_abs)
+
+
+# ---------------------------------------------------------------------------
+# Serving: single-token decode against a seq_len cache
+# ---------------------------------------------------------------------------
+
+def build_decode_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                      mesh_cfg: MeshConfig):
+    plan = rules.plan_for(cfg, mesh_cfg)
+    b, s = shape.global_batch, shape.seq_len
+
+    def decode_step(gen_params, token, caches, cache_index):
+        out = gan_model.generator_lm_apply(
+            gen_params, cfg, token, mode="decode", caches=caches,
+            cache_index=cache_index, remat=False)
+        return out["logits"][:, 0, :], out["caches"]
+
+    gen_abs = _bf16_floats(jax.eval_shape(
+        lambda: gan_model.generator_init(jax.random.PRNGKey(0), cfg)))
+    token_abs = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    caches_abs = jax.eval_shape(
+        lambda: init_decode_caches(cfg, b, s, dtype=COMPUTE_DTYPE))
+    idx_abs = jax.ShapeDtypeStruct((), jnp.int32)
+
+    gen_sp = rules.param_specs(gen_abs, mesh, plan,
+                               fsdp=plan.fsdp_axes is not None)
+    cache_sp = rules.cache_specs(cfg, caches_abs, b, mesh, plan)
+    dev = plan.dev_axes
+    tok_sp = P(dev) if b % math.prod(mesh.shape[a] for a in dev) == 0 else P()
+
+    in_shardings = (_named(mesh, gen_sp),
+                    NamedSharding(mesh, tok_sp),
+                    _named(mesh, cache_sp),
+                    NamedSharding(mesh, P()))
+    out_shardings = (None, _named(mesh, cache_sp))
+    step = jax.jit(decode_step, in_shardings=in_shardings,
+                   out_shardings=out_shardings)
+    return step, (gen_abs, token_abs, caches_abs, idx_abs)
+
+
+# ---------------------------------------------------------------------------
+
+def build_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
+               mesh_cfg: MeshConfig, **kw):
+    if shape.kind == "train":
+        return build_train_step(cfg, shape, mesh, mesh_cfg, **kw)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, shape, mesh, mesh_cfg)
+    if shape.kind == "decode":
+        return build_decode_step(cfg, shape, mesh, mesh_cfg)
+    raise ValueError(shape.kind)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, mesh, mesh_cfg):
+    """ShapeDtypeStruct stand-ins for every model input of this step."""
+    _, args = build_step(cfg, shape, mesh, mesh_cfg)
+    return args

@@ -1,0 +1,91 @@
+"""Named perf variants for the §Perf hillclimb.
+
+A variant transforms (ArchConfig, step kwargs) before the dry-run
+builds/lowers the step, so each hypothesis→change→measure iteration is
+one `dryrun --variant <name> --tag <name>` invocation whose JSON lands
+next to the baseline for comparison.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+from repro.configs.base import ArchConfig
+
+
+def apply(cfg: ArchConfig, variant: str):
+    """Returns (cfg, step_kwargs) for a named variant ('' = baseline)."""
+    kw: dict = {}
+    if not variant:
+        return cfg, kw
+    for part in variant.split("+"):
+        cfg, kw = _apply_one(cfg, kw, part)
+    return cfg, kw
+
+
+def _apply_one(cfg: ArchConfig, kw: dict, name: str):
+    if name == "discrep":
+        # pin the (vmapped) discriminator residual stream to replicated-
+        # within-device-group: weights stay TP; matmuls contract the
+        # sharded dim with small activation all-reduces instead of GSPMD
+        # re-gathering the weights every layer/microstep.
+        from jax.sharding import PartitionSpec as P
+        return cfg, {**kw, "act_disc_spec": P(None, None, None)}
+    if name == "flashrep":
+        # head-sharding-friendly flash layout (repeat kv to full heads)
+        return dataclasses.replace(cfg, flash_repeat_kv=True), kw
+    if name == "moepin":
+        # pin dispatched expert tensors replicated-within-device so expert
+        # matmuls do partial-sum ARs instead of dispatch all-gathers
+        from repro.nn import moe as moe_mod
+        moe_mod.CONSTRAIN_DISPATCH = "replicated"
+        return cfg, kw
+    if name == "hoist":
+        # compute the shared-seed fake batch once per local step (exact
+        # same math; K x fewer generator forwards) — see ProtocolConfig
+        ov = dict(kw.get("pcfg_overrides") or {})
+        ov["hoist_fakes"] = True
+        return cfg, {**kw, "pcfg_overrides": ov}
+    if name == "fused":
+        # fused qkv + fused in|gate projections (fewer TP backward ARs)
+        return dataclasses.replace(cfg, fuse_proj=True), kw
+    if name == "headpin":
+        # flashrep + pin flash q/k/v heads onto the model axis so the
+        # whole blockwise attention scan is TP-local (no per-block reshard)
+        import repro.nn.attention as attn_mod
+        attn_mod.FLASH_HEAD_AXIS = "model"
+        return dataclasses.replace(cfg, flash_repeat_kv=True), kw
+    if name == "parallel":
+        # paper's parallel schedule: the generator update is dataflow-
+        # independent of Algorithm 2's all-reduce -> overlappable
+        kw = {**kw, "schedule": "parallel"}
+        return cfg, kw
+    if name == "moe_sort":
+        # memory-lean sort dispatch instead of GShard one-hot einsum
+        assert cfg.moe is not None
+        return dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, dispatch="sort")), kw
+    if m := re.fullmatch(r"micro(\d+)", name):
+        ov = dict(kw.get("pcfg_overrides") or {})
+        ov["micro_batch_d"] = int(m.group(1))
+        return cfg, {**kw, "pcfg_overrides": ov}
+    if m := re.fullmatch(r"nd(\d+)", name):
+        ov = dict(kw.get("pcfg_overrides") or {})
+        ov["n_d"] = int(m.group(1))
+        return cfg, {**kw, "pcfg_overrides": ov}
+    if m := re.fullmatch(r"group(\d+)", name):
+        # MoE dispatch group size
+        assert cfg.moe is not None
+        return dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe,
+                                         group_size=int(m.group(1)))), kw
+    if m := re.fullmatch(r"cap(\d+)", name):
+        # MoE capacity factor (percent)
+        assert cfg.moe is not None
+        return dataclasses.replace(
+            cfg, moe=dataclasses.replace(
+                cfg.moe, capacity_factor=int(m.group(1)) / 100.0)), kw
+    if m := re.fullmatch(r"disc(\d+)", name):
+        # discriminator depth (layers)
+        return dataclasses.replace(cfg, disc_layers=int(m.group(1))), kw
+    raise ValueError(f"unknown variant {name!r}")

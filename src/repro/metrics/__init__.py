@@ -1,0 +1,1 @@
+from repro.metrics.fid import fid_score, feature_stats, make_feature_extractor

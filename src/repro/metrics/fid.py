@@ -1,0 +1,94 @@
+"""Fréchet inception distance (paper's metric, [11]).
+
+The exact Fréchet formula is used:
+    FID = |mu1 - mu2|^2 + tr(S1 + S2 - 2 (S1 S2)^{1/2})
+with the matrix square root computed via the symmetric eigensystem of
+sqrt(S1) S2 sqrt(S1).
+
+The container is offline, so InceptionV3 weights are unavailable; the
+feature extractor is a FIXED random convolutional network (seeded, 3
+strided conv stages + global average pool). Random convolutional
+features preserve distributional distances well enough for the paper's
+*relative* comparisons (schedule vs schedule, proposed vs FedGAN), which
+is what EXPERIMENTS.md validates. This substitution is recorded in
+DESIGN.md.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def make_feature_extractor(channels: int, *, feat_dim: int = 64,
+                           seed: int = 42):
+    """Fixed random conv feature extractor: images (b,H,W,C) -> (b, feat)."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    widths = [16, 32, feat_dim]
+    w0 = jax.random.normal(ks[0], (4, 4, channels, widths[0])) / 4.0
+    w1 = jax.random.normal(ks[1], (4, 4, widths[0], widths[1])) / 8.0
+    w2 = jax.random.normal(ks[2], (4, 4, widths[1], widths[2])) / 16.0
+
+    @jax.jit
+    def features(images):
+        x = images.astype(jnp.float32)
+        for w in (w0, w1, w2):
+            x = jax.lax.conv_general_dilated(
+                x, w, window_strides=(2, 2), padding=((1, 1), (1, 1)),
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            x = jnp.tanh(x)
+        return jnp.mean(x, axis=(1, 2))
+
+    return features
+
+
+def make_token_feature_extractor(vocab: int, *, feat_dim: int = 64,
+                                 seed: int = 42):
+    """Fixed random features for token/embedding sequences:
+    (b, s) int tokens or (b, s, d) embeddings -> (b, feat)."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    table = jax.random.normal(k1, (vocab, feat_dim)) * 0.3
+
+    @jax.jit
+    def features(x):
+        if x.ndim == 2:  # token ids
+            e = jnp.take(table, x, axis=0)
+        else:
+            proj = jax.random.normal(k2, (x.shape[-1], feat_dim)) * (
+                x.shape[-1] ** -0.5)
+            e = jnp.tanh(x.astype(jnp.float32) @ proj)
+        # first + second order sequence statistics
+        return jnp.concatenate([e.mean(1), jnp.tanh(e).std(1)], axis=-1)
+
+    return features
+
+
+def feature_stats(feats) -> tuple[np.ndarray, np.ndarray]:
+    f = np.asarray(feats, dtype=np.float64)
+    mu = f.mean(0)
+    cov = np.cov(f, rowvar=False)
+    return mu, np.atleast_2d(cov)
+
+
+def _sqrtm_psd(mat: np.ndarray) -> np.ndarray:
+    vals, vecs = np.linalg.eigh(mat)
+    vals = np.clip(vals, 0.0, None)
+    return (vecs * np.sqrt(vals)) @ vecs.T
+
+
+def frechet_distance(mu1, cov1, mu2, cov2) -> float:
+    s1_half = _sqrtm_psd(cov1)
+    inner = _sqrtm_psd(s1_half @ cov2 @ s1_half)
+    d2 = float(np.sum((mu1 - mu2) ** 2)
+               + np.trace(cov1 + cov2 - 2.0 * inner))
+    return max(d2, 0.0)
+
+
+def fid_score(real_feats, fake_feats) -> float:
+    mu1, c1 = feature_stats(real_feats)
+    mu2, c2 = feature_stats(fake_feats)
+    return frechet_distance(mu1, c1, mu2, c2)

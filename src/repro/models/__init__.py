@@ -1,0 +1,18 @@
+from repro.models.backbone import (
+    backbone_init,
+    backbone_apply,
+    encoder_init,
+    encoder_apply,
+    init_decode_caches,
+    count_params,
+)
+from repro.models.gan import (
+    generator_init,
+    generator_apply,
+    generator_lm_init,
+    generator_lm_apply,
+    discriminator_init,
+    discriminator_apply,
+    gan_init,
+)
+from repro.models import dcgan

@@ -1,0 +1,305 @@
+"""Unified grouped-scan backbone covering all assigned architectures.
+
+A backbone is a repeated *group* of sublayers (`cfg.group_pattern`),
+scanned `cfg.n_groups_stack` times with parameters stacked on a leading
+group axis. This keeps the lowered HLO compact (one group body
+regardless of depth) for every family:
+
+  dense        group = (attn,)
+  gemma3       group = (attn_local x5, attn_global)
+  moe          group = (attn,)            with MoE feed-forward
+  ssm          group = (ssm,)
+  hybrid       group = (ssm x6, shared_attn)   [shared params, per-call cache]
+  encdec       group = (attn, cross)      decoder; separate encoder stack
+  vlm          group = (attn x4, cross)   gated cross-attn to image embeds
+
+Modes: "train" (full seq, no cache), "prefill" (full seq, emits decode
+caches), "decode" (one token against caches).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.nn.norms import rmsnorm_init
+from repro.configs.base import ArchConfig
+from repro.models import blocks
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _sublayer_init(key, cfg: ArchConfig, kind: str):
+    if kind in ("attn", "attn_local", "attn_global"):
+        return blocks.attn_layer_init(key, cfg)
+    if kind == "cross":
+        return blocks.cross_layer_init(key, cfg, gated=cfg.family == "vlm")
+    if kind == "ssm":
+        return blocks.ssm_layer_init(key, cfg)
+    if kind == "shared_attn":
+        return {}  # parameters live in the shared slot, not per group
+    raise ValueError(kind)
+
+
+def backbone_init(key, cfg: ArchConfig):
+    pattern = cfg.group_pattern
+    n_groups = cfg.n_groups_stack
+    k_groups, k_shared, k_final = jax.random.split(key, 3)
+
+    def one_group(gkey):
+        sub_keys = jax.random.split(gkey, len(pattern))
+        return {f"sub{i}": _sublayer_init(sub_keys[i], cfg, kind)
+                for i, kind in enumerate(pattern)}
+
+    group_keys = jax.random.split(k_groups, n_groups)
+    params = {"groups": jax.vmap(one_group)(group_keys),
+              "final_norm": blocks._norm_init(cfg, cfg.d_model)}
+    if "shared_attn" in pattern:
+        params["shared"] = blocks.attn_layer_init(k_shared, cfg)
+    return params
+
+
+def encoder_init(key, cfg: ArchConfig):
+    """Bidirectional encoder stack (whisper). Input: precomputed frame
+    embeddings (the conv/mel frontend is the assignment's stub)."""
+    enc_cfg = dataclasses.replace(cfg, moe=None)
+    keys = jax.random.split(key, cfg.n_enc_layers + 1)
+
+    def one_layer(k):
+        return blocks.attn_layer_init(k, enc_cfg, causal=False)
+
+    return {"layers": jax.vmap(one_layer)(keys[:-1]),
+            "final_norm": blocks._norm_init(cfg, cfg.d_model)}
+
+
+def count_params(params) -> int:
+    return int(sum(x.size for x in jax.tree_util.tree_leaves(params)))
+
+
+# ---------------------------------------------------------------------------
+# Decode caches
+# ---------------------------------------------------------------------------
+
+def _attn_cache(cfg: ArchConfig, batch: int, length: int, dtype):
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, length, cfg.n_kv_heads, hd), dtype=dtype),
+        "v": jnp.zeros((batch, length, cfg.n_kv_heads, hd), dtype=dtype),
+        "pos": jnp.zeros((batch, length), dtype=jnp.int32),
+        "valid": jnp.zeros((batch, length), dtype=bool),
+    }
+
+
+def _ssm_cache(cfg: ArchConfig, batch: int, dtype):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    return {
+        "ssm": jnp.zeros((batch, n_heads, s.d_state, s.head_dim), dtype=jnp.float32),
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype=dtype),
+    }
+
+
+def _cross_cache(cfg: ArchConfig, batch: int, dtype):
+    t = cfg.enc_seq if cfg.family == "encdec" else cfg.n_image_tokens
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, t, cfg.n_kv_heads, hd), dtype=dtype),
+        "v": jnp.zeros((batch, t, cfg.n_kv_heads, hd), dtype=dtype),
+    }
+
+
+def sublayer_cache_shape(cfg: ArchConfig, kind: str, batch: int,
+                         cache_len: int, dtype):
+    if kind in ("attn", "attn_local", "attn_global", "shared_attn"):
+        window = cfg.sublayer_window(kind)
+        length = cache_len if window is None else min(window, cache_len)
+        return _attn_cache(cfg, batch, length, dtype)
+    if kind == "ssm":
+        return _ssm_cache(cfg, batch, dtype)
+    if kind == "cross":
+        return _cross_cache(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def init_decode_caches(cfg: ArchConfig, batch: int, cache_len: int,
+                       dtype=jnp.bfloat16):
+    """Zeroed decode caches, stacked over the group axis (scan xs)."""
+    pattern = cfg.group_pattern
+    n_groups = cfg.n_groups_stack
+
+    def stack(tree):
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_groups,) + x.shape).copy(), tree)
+
+    return {f"sub{i}": stack(sublayer_cache_shape(cfg, kind, batch, cache_len, dtype))
+            for i, kind in enumerate(pattern)}
+
+
+# ---------------------------------------------------------------------------
+# Apply
+# ---------------------------------------------------------------------------
+
+def _kv_to_cache(kv, positions, window, cache_len: int):
+    """Turn full-sequence k/v (b, s, kv_heads, hd) into a decode cache.
+
+    Full attention: pad/place the s entries at slots [0, s) of a
+    cache_len-sized buffer. Sliding window: keep the last `window`
+    entries, scattered at their ring-buffer slots (pos % window) so a
+    later decode insert at `pos % window` stays consistent.
+    """
+    k, v = kv["k"], kv["v"]
+    b, s = k.shape[0], k.shape[1]
+    if window is None or window >= cache_len:
+        length = cache_len
+        pad = length - s
+        assert pad >= 0, f"prefill length {s} exceeds cache {length}"
+        padk = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        padv = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pos = jnp.pad(positions, ((0, 0), (0, pad)))
+        valid = jnp.pad(jnp.ones((b, s), dtype=bool), ((0, 0), (0, pad)))
+        return {"k": padk, "v": padv, "pos": pos.astype(jnp.int32), "valid": valid}
+    # ring buffer: slot j holds the latest position p <= s-1 with p % window == j
+    import numpy as np
+    j = np.arange(window)
+    src = j + window * ((s - 1 - j) // window)     # in [s-window, s)
+    src = np.clip(src, 0, s - 1)
+    filled = src >= max(0, s - window)
+    take = jnp.asarray(src)
+    return {
+        "k": jnp.take(k, take, axis=1),
+        "v": jnp.take(v, take, axis=1),
+        "pos": jnp.take(positions, take, axis=1).astype(jnp.int32),
+        "valid": jnp.broadcast_to(jnp.asarray(filled), (b, window)),
+    }
+
+
+def _run_sublayer(params_i, cfg: ArchConfig, kind: str, h, *, inv_freq,
+                  positions, cache, cache_index, enc_h, shared_params,
+                  mode: str, cache_len: int = 0, ssd_scan_impl=None):
+    """Dispatch one sublayer. Returns (h, aux, new_cache_or_None)."""
+    if kind in ("attn", "attn_local", "attn_global", "shared_attn"):
+        p = shared_params if kind == "shared_attn" else params_i
+        window = cfg.sublayer_window(kind)
+        dropless = mode != "train"   # serving never capacity-drops
+        if mode == "decode":
+            return blocks.attn_layer_apply(
+                p, cfg, h, window=window, inv_freq=inv_freq,
+                positions=positions, cache=cache, cache_index=cache_index,
+                moe_dropless=dropless)
+        h, aux, kv = blocks.attn_layer_apply(
+            p, cfg, h, window=window, inv_freq=inv_freq, positions=positions,
+            return_kv=(mode == "prefill"), moe_dropless=dropless)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = _kv_to_cache(kv, positions, window, cache_len)
+        return h, aux, new_cache
+    if kind == "ssm":
+        if mode == "decode":
+            return blocks.ssm_layer_apply(params_i, cfg, h, state=cache)
+        return blocks.ssm_layer_apply(params_i, cfg, h,
+                                      scan_impl=ssd_scan_impl,
+                                      return_state=(mode == "prefill"))
+    if kind == "cross":
+        gated = cfg.family == "vlm"
+        if mode == "decode":
+            h, aux, _ = blocks.cross_layer_apply(
+                params_i, cfg, h, enc_kv=cache, gated=gated)
+            return h, aux, cache
+        h, aux, kv = blocks.cross_layer_apply(
+            params_i, cfg, h, enc_h=enc_h, gated=gated)
+        return h, aux, (kv if mode == "prefill" else None)
+    raise ValueError(kind)
+
+
+def backbone_apply(params, cfg: ArchConfig, h, *, mode: str = "train",
+                   caches=None, cache_index=None, positions=None,
+                   enc_h=None, remat: bool = True, ssd_scan_impl=None,
+                   prefill_cache_len: Optional[int] = None, act_spec=None):
+    """Run the backbone.
+
+    h: (b, s, d) hidden states (already embedded / projected).
+    mode: "train" | "prefill" | "decode".
+    caches/cache_index: decode state (see init_decode_caches).
+    enc_h: encoder or image embeddings for cross sublayers.
+    Returns dict(h=..., aux=..., caches=...).
+    """
+    pattern = cfg.group_pattern
+    b, s, _ = h.shape
+    inv_freq = nn.rope_frequencies(cfg.resolved_head_dim, base=cfg.rope_base)
+    if positions is None:
+        if mode == "decode":
+            assert cache_index is not None
+            positions = jnp.full((b, s), cache_index, dtype=jnp.int32)
+        else:
+            positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    shared_params = params.get("shared")
+    cache_len = prefill_cache_len if prefill_cache_len is not None else s
+
+    def constrain(x):
+        # Sequence-parallel residual storage (Megatron-SP adaptation): the
+        # scan carry is what remat keeps live across groups — pinning its
+        # sharding caps per-chip activation memory at depth x (b, s/axes, d).
+        if act_spec is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, act_spec)
+
+    h = constrain(h)
+
+    def group_body(carry, xs):
+        h, aux = carry
+        if mode == "decode":
+            params_g, caches_g = xs
+        else:
+            params_g, caches_g = xs, None
+        new_caches = {}
+        for i, kind in enumerate(pattern):
+            cache_i = caches_g[f"sub{i}"] if caches_g is not None else None
+            h, aux_i, new_cache_i = _run_sublayer(
+                params_g[f"sub{i}"], cfg, kind, h, inv_freq=inv_freq,
+                positions=positions, cache=cache_i, cache_index=cache_index,
+                enc_h=enc_h, shared_params=shared_params, mode=mode,
+                cache_len=cache_len, ssd_scan_impl=ssd_scan_impl)
+            aux = aux + aux_i
+            if new_cache_i is not None:
+                new_caches[f"sub{i}"] = new_cache_i
+        return (constrain(h), aux), new_caches
+
+    body = group_body
+    if mode == "train" and remat:
+        body = jax.checkpoint(group_body)
+
+    aux0 = jnp.zeros((), dtype=jnp.float32)
+    if mode == "decode":
+        xs = (params["groups"], caches)
+    else:
+        xs = params["groups"]
+    (h, aux), caches_out = jax.lax.scan(body, (h, aux0), xs)
+
+    h = blocks._norm_apply(cfg, params["final_norm"], h)
+    return {"h": h, "aux": aux, "caches": caches_out if caches_out else None}
+
+
+def encoder_apply(params, cfg: ArchConfig, feats, *, remat: bool = True):
+    """Bidirectional encoder over stub frame embeddings (b, t, d)."""
+    b, t, _ = feats.shape
+    inv_freq = nn.rope_frequencies(cfg.resolved_head_dim, base=cfg.rope_base)
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+
+    def layer_body(carry, layer_params):
+        h, = carry
+        h, _, _ = blocks.attn_layer_apply(
+            layer_params, cfg, h, window=None, inv_freq=inv_freq,
+            positions=positions, causal=False)
+        return (h,), None
+
+    body = jax.checkpoint(layer_body) if remat else layer_body
+    (h,), _ = jax.lax.scan(body, (feats,), params["layers"])
+    return blocks._norm_apply(cfg, params["final_norm"], h)

@@ -1,0 +1,167 @@
+"""Sublayer blocks composed by the grouped-scan backbone.
+
+Each block is (init, apply) over a full residual sublayer. `apply`
+uniformly takes/returns an optional cache dict so the backbone can treat
+train / prefill / decode with one code path.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.nn.norms import rmsnorm_init, rmsnorm_apply, layernorm_init, layernorm_apply
+from repro.configs.base import ArchConfig
+
+
+def _norm_init(cfg: ArchConfig, d: int):
+    if cfg.use_attn_bias:  # whisper flavour -> LayerNorm
+        return layernorm_init(d)
+    return rmsnorm_init(d)
+
+
+def _norm_apply(cfg: ArchConfig, params, x):
+    if cfg.use_attn_bias:
+        return layernorm_apply(params, x)
+    return rmsnorm_apply(params, x, eps=cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Self-attention + FF layer (dense or MoE)
+# ---------------------------------------------------------------------------
+
+def attn_layer_init(key, cfg: ArchConfig, *, causal: bool = True):
+    ka, kf = jax.random.split(key)
+    params = {
+        "ln_attn": _norm_init(cfg, cfg.d_model),
+        "attn": nn.attention_init(
+            ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim,
+            qk_norm=cfg.qk_norm, use_bias=cfg.use_attn_bias,
+            fuse_qkv=cfg.fuse_proj),
+        "ln_ff": _norm_init(cfg, cfg.d_model),
+    }
+    if cfg.moe is not None:
+        params["ff"] = nn.moe_init(kf, cfg.d_model, cfg.moe.d_ff_expert,
+                                   cfg.moe.n_experts)
+    else:
+        params["ff"] = nn.mlp_init(kf, cfg.d_model, cfg.d_ff,
+                                   gated=not cfg.use_attn_bias,
+                                   use_bias=cfg.use_attn_bias,
+                                   fuse_gate=cfg.fuse_proj)
+    return params
+
+
+def attn_layer_apply(params, cfg: ArchConfig, h, *, window: Optional[int],
+                     inv_freq, positions, causal: bool = True,
+                     cache=None, cache_index=None, return_kv: bool = False,
+                     moe_dropless: bool = False):
+    """Returns (h, aux_loss, new_cache_or_kv)."""
+    x = _norm_apply(cfg, params["ln_attn"], h)
+    out = nn.attention_apply(
+        params["attn"], x, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        inv_freq=inv_freq, q_positions=positions, causal=causal,
+        window=window, qk_norm=cfg.qk_norm,
+        cache=cache, cache_index=cache_index, return_kv=return_kv,
+        flash_repeat_kv=cfg.flash_repeat_kv)
+    if cache is not None or return_kv:
+        attn_out, new_cache = out
+    else:
+        attn_out, new_cache = out, None
+    h = h + attn_out
+    x = _norm_apply(cfg, params["ln_ff"], h)
+    aux = jnp.zeros((), dtype=jnp.float32)
+    if cfg.moe is not None:
+        ff_out, aux = nn.moe_apply(
+            params["ff"], x, n_experts=cfg.moe.n_experts, top_k=cfg.moe.top_k,
+            capacity_factor=cfg.moe.capacity_factor,
+            group_size=cfg.moe.group_size, dispatch=cfg.moe.dispatch,
+            dropless=moe_dropless)
+    else:
+        ff_out = nn.mlp_apply(params["ff"], x)
+    h = h + ff_out
+    return h, aux, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention layer (whisper decoder per-layer; llama-vision gated)
+# ---------------------------------------------------------------------------
+
+def cross_layer_init(key, cfg: ArchConfig, *, gated: bool):
+    ka, kf = jax.random.split(key)
+    params = {
+        "ln": _norm_init(cfg, cfg.d_model),
+        "attn": nn.attention_init(
+            ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim,
+            qk_norm=cfg.qk_norm, use_bias=cfg.use_attn_bias),
+    }
+    if gated:
+        # llama-3.2-vision style gated cross-attn with its own FF sublayer
+        params["gate_attn"] = jnp.zeros(())
+        params["gate_ff"] = jnp.zeros(())
+        params["ln_ff"] = _norm_init(cfg, cfg.d_model)
+        params["ff"] = nn.mlp_init(kf, cfg.d_model, cfg.d_ff, gated=True)
+    return params
+
+
+def cross_layer_apply(params, cfg: ArchConfig, h, *, enc_h=None,
+                      enc_kv=None, gated: bool):
+    """Cross-attend to encoder/image states.
+
+    enc_h: (b, t, d) raw encoder states (train/prefill) — k/v projected here.
+    enc_kv: pre-projected {"k","v"} cache (decode) — skips the projection.
+    Returns (h, aux, enc_kv_out) where enc_kv_out is the projected k/v
+    (so prefill can populate the cross cache once).
+    """
+    x = _norm_apply(cfg, params["ln"], h)
+    if enc_kv is not None:
+        attn_out = nn.attention_apply(
+            params["attn"], x, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            inv_freq=None, causal=False, qk_norm=cfg.qk_norm,
+            kv_override=enc_kv)
+        kv_out = enc_kv
+    else:
+        attn_out, kv_out = nn.attention_apply(
+            params["attn"], x, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            inv_freq=None, causal=False, qk_norm=cfg.qk_norm,
+            kv_x=enc_h, return_kv=True)
+    if gated:
+        attn_out = jnp.tanh(params["gate_attn"]).astype(h.dtype) * attn_out
+    h = h + attn_out
+    aux = jnp.zeros((), dtype=jnp.float32)
+    if gated:
+        x = _norm_apply(cfg, params["ln_ff"], h)
+        ff_out = nn.mlp_apply(params["ff"], x)
+        h = h + jnp.tanh(params["gate_ff"]).astype(h.dtype) * ff_out
+    return h, aux, kv_out
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD) layer
+# ---------------------------------------------------------------------------
+
+def ssm_layer_init(key, cfg: ArchConfig):
+    s = cfg.ssm
+    return {
+        "ln": rmsnorm_init(cfg.d_model),
+        "mixer": nn.ssd_mixer_init(
+            key, cfg.d_model, d_state=s.d_state, head_dim=s.head_dim,
+            expand=s.expand, n_groups=s.n_groups, d_conv=s.d_conv),
+    }
+
+
+def ssm_layer_apply(params, cfg: ArchConfig, h, *, state=None, scan_impl=None,
+                    return_state: bool = False):
+    """Returns (h, aux, new_state)."""
+    s = cfg.ssm
+    x = rmsnorm_apply(params["ln"], h, eps=cfg.norm_eps)
+    out = nn.ssd_mixer_apply(
+        params["mixer"], x, d_state=s.d_state, head_dim=s.head_dim,
+        expand=s.expand, n_groups=s.n_groups, chunk=s.chunk,
+        state=state, scan_impl=scan_impl, return_state=return_state)
+    if state is not None or return_state:
+        mixed, new_state = out
+    else:
+        mixed, new_state = out, None
+    return h + mixed, jnp.zeros((), dtype=jnp.float32), new_state

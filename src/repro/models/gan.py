@@ -1,0 +1,141 @@
+"""GAN wrappers around the backbone zoo.
+
+For every assigned architecture the protocol trains a *backbone-GAN*:
+
+  Generator   noise z (b, s, d_z) --z_proj--> backbone --out_proj-->
+              synthetic embedding sequence (b, s, d_model).
+              The same parameter set also carries an embedding table and
+              lm_head so the generator serves as a causal LM
+              (`generator_lm_apply`) for the prefill/decode shapes.
+
+  Discriminator  embedding sequence --in_proj--> backbone --mean-pool-->
+              scalar real/fake logit. Real token data enters through the
+              discriminator's own embedding table (feature-space GAN —
+              the standard differentiable formulation for token data).
+
+Conditioned families (whisper audio frames, llama-vision image patches)
+pass the stub frontend embeddings as `enc_h` to both nets.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.nn import initializers
+from repro.configs.base import ArchConfig
+from repro.models.backbone import (
+    backbone_init, backbone_apply, encoder_init, encoder_apply)
+
+
+def disc_config(cfg: ArchConfig) -> ArchConfig:
+    if cfg.disc_layers is None:
+        return cfg
+    return dataclasses.replace(cfg, n_layers=cfg.disc_layers, disc_layers=None)
+
+
+# ---------------------------------------------------------------------------
+# Generator
+# ---------------------------------------------------------------------------
+
+def generator_init(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 6)
+    params = {
+        "z_proj": initializers.lecun_normal(ks[0], (cfg.d_z, cfg.d_model)),
+        "backbone": backbone_init(ks[1], cfg),
+        "out_proj": initializers.lecun_normal(ks[2], (cfg.d_model, cfg.d_model)),
+        "embed": nn.embedding_init(ks[3], cfg.vocab, cfg.d_model),
+        "lm_head": initializers.lecun_normal(ks[4], (cfg.d_model, cfg.vocab)),
+    }
+    if cfg.family == "encdec":
+        params["encoder"] = encoder_init(ks[5], cfg)
+    return params
+
+
+def generator_apply(params, cfg: ArchConfig, z, *, enc_feats=None,
+                    remat: bool = True, act_spec=None):
+    """GAN mode: noise sequence -> synthetic embedding sequence (b, s, d)."""
+    h = z @ params["z_proj"].astype(z.dtype)
+    enc_h = _encode(params, cfg, enc_feats, remat=remat)
+    out = backbone_apply(params["backbone"], cfg, h, mode="train",
+                         enc_h=enc_h, remat=remat, act_spec=act_spec)
+    fake = out["h"] @ params["out_proj"].astype(h.dtype)
+    return fake, out["aux"]
+
+
+def generator_lm_init(key, cfg: ArchConfig):
+    return generator_init(key, cfg)
+
+
+def generator_lm_apply(params, cfg: ArchConfig, tokens, *, mode: str = "train",
+                       caches=None, cache_index=None, enc_feats=None,
+                       remat: bool = True, prefill_cache_len=None):
+    """LM mode: tokens -> logits. Used by serving (prefill/decode) and
+    by the LM-pretraining example."""
+    h = nn.embedding_apply(params["embed"], tokens)
+    # decode attends cross-attention through the prefilled cache; the
+    # encoder only runs on train/prefill.
+    enc_h = None if mode == "decode" else _encode(params, cfg, enc_feats,
+                                                  remat=remat)
+    positions = None
+    out = backbone_apply(params["backbone"], cfg, h, mode=mode,
+                         caches=caches, cache_index=cache_index,
+                         positions=positions, enc_h=enc_h, remat=remat,
+                         prefill_cache_len=prefill_cache_len)
+    logits = out["h"] @ params["lm_head"].astype(out["h"].dtype)
+    return {"logits": logits, "aux": out["aux"], "caches": out["caches"]}
+
+
+def _encode(params, cfg: ArchConfig, enc_feats, *, remat: bool):
+    """Resolve cross-attention context from stub frontend features."""
+    if cfg.family == "encdec":
+        assert enc_feats is not None, f"{cfg.name} needs encoder features"
+        return encoder_apply(params["encoder"], cfg, enc_feats, remat=remat)
+    if cfg.family == "vlm":
+        assert enc_feats is not None, f"{cfg.name} needs image embeddings"
+        return enc_feats  # projector is part of the stub frontend
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Discriminator
+# ---------------------------------------------------------------------------
+
+def discriminator_init(key, cfg: ArchConfig):
+    dcfg = disc_config(cfg)
+    ks = jax.random.split(key, 5)
+    params = {
+        "in_proj": initializers.lecun_normal(ks[0], (cfg.d_model, cfg.d_model)),
+        "backbone": backbone_init(ks[1], dcfg),
+        "embed": nn.embedding_init(ks[2], cfg.vocab, cfg.d_model),
+        "score": initializers.lecun_normal(ks[3], (cfg.d_model, 1)),
+    }
+    if cfg.family == "encdec":
+        params["encoder"] = encoder_init(ks[4], dcfg)
+    return params
+
+
+def discriminator_embed(params, tokens):
+    """Embed real token data into the discriminator's input space."""
+    return nn.embedding_apply(params["embed"], tokens)
+
+
+def discriminator_apply(params, cfg: ArchConfig, x_embed, *, enc_feats=None,
+                        remat: bool = True, act_spec=None):
+    """x_embed: (b, s, d) — real (embedded tokens) or fake (generator out).
+    Returns per-example logits (b,)."""
+    dcfg = disc_config(cfg)
+    h = x_embed @ params["in_proj"].astype(x_embed.dtype)
+    enc_h = _encode(params, dcfg, enc_feats, remat=remat)
+    out = backbone_apply(params["backbone"], dcfg, h, mode="train",
+                         enc_h=enc_h, remat=remat, act_spec=act_spec)
+    pooled = jnp.mean(out["h"].astype(jnp.float32), axis=1)
+    logit = pooled @ params["score"].astype(jnp.float32)
+    return logit[..., 0], out["aux"]
+
+
+def gan_init(key, cfg: ArchConfig):
+    kg, kd = jax.random.split(key)
+    return {"gen": generator_init(kg, cfg), "disc": discriminator_init(kd, cfg)}

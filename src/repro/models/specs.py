@@ -1,0 +1,87 @@
+"""GanModelSpec adapters: plug concrete models into the protocol."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.configs.dcgan import DCGANConfig
+from repro.core.protocol import GanModelSpec
+from repro.models import dcgan as dcgan_model
+from repro.models import gan as gan_model
+
+
+def make_dcgan_spec(cfg: DCGANConfig, *,
+                    gen_loss_variant: str = "minimax") -> GanModelSpec:
+    """The paper's experimental model: image GAN over (b, H, W, C)."""
+    return GanModelSpec(
+        sample_z=lambda key, n: jax.random.normal(key, (n, cfg.nz)),
+        gen_apply=lambda gen, z: dcgan_model.generator_apply(gen, cfg, z),
+        disc_real=lambda disc, x: dcgan_model.discriminator_apply(disc, cfg, x),
+        disc_fake=lambda disc, f: dcgan_model.discriminator_apply(disc, cfg, f),
+        gen_loss_variant=gen_loss_variant,
+    )
+
+
+def make_backbone_spec(cfg: ArchConfig, seq_len: int, *,
+                       enc_feats_fn=None, remat: bool = True,
+                       gen_loss_variant: str = "minimax",
+                       act_spec_gen=None, act_spec_disc=None,
+                       dtype=jnp.float32) -> GanModelSpec:
+    """Backbone-GAN over token data.
+
+    Real batches are token arrays (m, seq_len); they enter the
+    discriminator through its embedding table. Fakes are generator
+    embedding sequences (m, seq_len, d). Conditioned families get their
+    stub frontend features from enc_feats_fn(n) (deterministic stub).
+    """
+    def enc(n):
+        return enc_feats_fn(n) if enc_feats_fn is not None else None
+
+    def sample_z(key, n):
+        # dtype matters: f32 noise would promote every downstream matmul
+        # (and all remat-carried residuals) to f32.
+        return jax.random.normal(key, (n, seq_len, cfg.d_z), dtype=dtype)
+
+    def gen_apply(gen, z):
+        fake, _aux = gan_model.generator_apply(gen, cfg, z,
+                                               enc_feats=enc(z.shape[0]),
+                                               remat=remat,
+                                               act_spec=act_spec_gen)
+        return fake
+
+    def disc_real(disc, tokens):
+        x = gan_model.discriminator_embed(disc, tokens)
+        logits, _aux = gan_model.discriminator_apply(
+            disc, cfg, x, enc_feats=enc(tokens.shape[0]), remat=remat,
+            act_spec=act_spec_disc)
+        return logits
+
+    def disc_fake(disc, fake):
+        logits, _aux = gan_model.discriminator_apply(
+            disc, cfg, fake, enc_feats=enc(fake.shape[0]), remat=remat,
+            act_spec=act_spec_disc)
+        return logits
+
+    return GanModelSpec(sample_z=sample_z, gen_apply=gen_apply,
+                        disc_real=disc_real, disc_fake=disc_fake,
+                        gen_loss_variant=gen_loss_variant)
+
+
+def make_stub_enc_feats(cfg: ArchConfig, *, seed: int = 7):
+    """Deterministic stand-in for the stubbed modality frontend
+    (mel+conv for whisper, ViT+projector for llama-vision)."""
+    if cfg.family == "encdec":
+        t = cfg.enc_seq
+    elif cfg.family == "vlm":
+        t = cfg.n_image_tokens
+    else:
+        return None
+    base = jax.random.normal(jax.random.PRNGKey(seed), (1, t, cfg.d_model))
+
+    def enc_feats(n):
+        return jnp.broadcast_to(base, (n, t, cfg.d_model))
+
+    return enc_feats

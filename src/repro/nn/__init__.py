@@ -1,0 +1,33 @@
+"""Functional neural-network substrate.
+
+Every module here is a pair of pure functions:
+
+    init(key, cfg, ...) -> params (a pytree of jnp arrays)
+    apply(params, inputs, ...) -> outputs
+
+No classes carry state; parameters are explicit pytrees so the
+distributed protocol (stacking, averaging, sharding) can manipulate them
+directly.
+"""
+from repro.nn import initializers
+from repro.nn.linear import linear_init, linear_apply
+from repro.nn.norms import (
+    rmsnorm_init,
+    rmsnorm_apply,
+    layernorm_init,
+    layernorm_apply,
+    batchnorm_init,
+    batchnorm_apply,
+)
+from repro.nn.embed import embedding_init, embedding_apply
+from repro.nn.rope import rope_frequencies, apply_rope
+from repro.nn.attention import attention_init, attention_apply
+from repro.nn.mlp import mlp_init, mlp_apply
+from repro.nn.moe import moe_init, moe_apply
+from repro.nn.ssm import ssd_mixer_init, ssd_mixer_apply, ssd_scan_ref
+from repro.nn.conv import (
+    conv2d_init,
+    conv2d_apply,
+    conv_transpose2d_init,
+    conv_transpose2d_apply,
+)

@@ -1,0 +1,273 @@
+"""Grouped-query attention with RoPE, qk-norm, sliding windows,
+cross-attention, and KV-cache support.
+
+One implementation serves every assigned architecture:
+  - full causal attention            (granite, qwen3, minitron, llama-vision)
+  - sliding-window causal attention  (mixtral SWA, gemma3 local layers)
+  - bidirectional attention          (whisper encoder)
+  - cross attention                  (whisper decoder, llama-vision image layers)
+  - single-token decode against a (possibly sequence-sharded) KV cache
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import initializers
+from repro.nn.norms import rmsnorm_init, rmsnorm_apply
+from repro.nn.rope import apply_rope
+from repro.nn.flash_ref import flash_attention_ref
+
+NEG_INF = -1e30
+# above this (s_q * s_k) product, non-decode attention goes through the
+# blockwise flash path (the naive path materializes b*h*s*t f32 scores)
+_FLASH_THRESHOLD = 512 * 512 + 1
+# optional mesh axis to pin flash q/k/v heads to (set by launch/steps.py);
+# makes the whole flash scan tensor-parallel-local over heads so GSPMD
+# inserts no per-block reshards. None = let GSPMD decide.
+FLASH_HEAD_AXIS = None
+
+
+def _pin_heads(t):
+    """t: (b, H, s, hd) — constrain H onto FLASH_HEAD_AXIS if set."""
+    if FLASH_HEAD_AXIS is None:
+        return t
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(
+        t, P(None, FLASH_HEAD_AXIS, None, None))
+
+
+def attention_init(key, d_model: int, n_heads: int, n_kv_heads: int,
+                   head_dim: Optional[int] = None, *, qk_norm: bool = False,
+                   use_bias: bool = False, kv_d_model: Optional[int] = None,
+                   fuse_qkv: bool = False, dtype=jnp.float32):
+    if head_dim is None:
+        head_dim = d_model // n_heads
+    if kv_d_model is None:
+        kv_d_model = d_model
+    assert n_heads % n_kv_heads == 0, "GQA requires n_heads % n_kv_heads == 0"
+    ks = jax.random.split(key, 4)
+    if fuse_qkv and kv_d_model == d_model:
+        # one fused projection: one matmul fwd, ONE dx all-reduce bwd
+        # (vs three) under tensor parallelism — §Perf iteration.
+        params = {
+            "wqkv": initializers.lecun_normal(
+                ks[0], (d_model, (n_heads + 2 * n_kv_heads) * head_dim),
+                dtype=dtype),
+            "wo": initializers.lecun_normal(
+                ks[3], (n_heads * head_dim, d_model),
+                fan_in=n_heads * head_dim, dtype=dtype),
+        }
+        if use_bias:
+            params["bqkv"] = jnp.zeros(
+                ((n_heads + 2 * n_kv_heads) * head_dim,), dtype=dtype)
+            params["bo"] = jnp.zeros((d_model,), dtype=dtype)
+        if qk_norm:
+            params["q_norm"] = rmsnorm_init(head_dim, dtype=dtype)
+            params["k_norm"] = rmsnorm_init(head_dim, dtype=dtype)
+        return params
+    params = {
+        "wq": initializers.lecun_normal(ks[0], (d_model, n_heads * head_dim), dtype=dtype),
+        "wk": initializers.lecun_normal(ks[1], (kv_d_model, n_kv_heads * head_dim), dtype=dtype),
+        "wv": initializers.lecun_normal(ks[2], (kv_d_model, n_kv_heads * head_dim), dtype=dtype),
+        "wo": initializers.lecun_normal(
+            ks[3], (n_heads * head_dim, d_model), fan_in=n_heads * head_dim, dtype=dtype),
+    }
+    if use_bias:
+        params["bq"] = jnp.zeros((n_heads * head_dim,), dtype=dtype)
+        params["bk"] = jnp.zeros((n_kv_heads * head_dim,), dtype=dtype)
+        params["bv"] = jnp.zeros((n_kv_heads * head_dim,), dtype=dtype)
+        params["bo"] = jnp.zeros((d_model,), dtype=dtype)
+    if qk_norm:
+        params["q_norm"] = rmsnorm_init(head_dim, dtype=dtype)
+        params["k_norm"] = rmsnorm_init(head_dim, dtype=dtype)
+    return params
+
+
+def _project(params, name, x, n_heads, head_dim):
+    y = x @ params[f"w{name}"].astype(x.dtype)
+    bias = params.get(f"b{name}")
+    if bias is not None:
+        y = y + bias.astype(x.dtype)
+    return y.reshape(x.shape[:-1] + (n_heads, head_dim))
+
+
+def build_mask(q_positions, k_positions, *, causal: bool,
+               window: Optional[int], k_valid=None):
+    """Additive attention bias (..., q, k) in float32.
+
+    q_positions: (..., q) int32 absolute positions of queries.
+    k_positions: (..., k) int32 absolute positions of keys.
+    window: if set, keys older than `window` positions are masked
+            (sliding-window attention; window includes the current token).
+    k_valid: optional (..., k) bool marking populated cache slots.
+    """
+    qp = q_positions[..., :, None]
+    kp = k_positions[..., None, :]
+    allowed = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), dtype=bool)
+    if causal:
+        allowed &= kp <= qp
+    if window is not None:
+        allowed &= kp > qp - window
+    if k_valid is not None:
+        allowed &= k_valid[..., None, :]
+    return jnp.where(allowed, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def attention_apply(params, x, *, n_heads: int, n_kv_heads: int,
+                    inv_freq=None, q_positions=None, kv_positions=None,
+                    causal: bool = True, window: Optional[int] = None,
+                    kv_x=None, cache=None, cache_index=None,
+                    qk_norm: bool = False, extra_mask=None,
+                    return_kv: bool = False, kv_override=None,
+                    flash_repeat_kv: bool = False):
+    """Attention forward.
+
+    x:  (b, s, d) queries source.
+    kv_x: optional (b, t, d_kv) for cross attention (keys/values source);
+          defaults to x (self attention).
+    cache: optional dict {"k": (b, L, kv, hd), "v": ..., "pos": (b, L) int32
+           absolute positions, "valid": (b, L) bool}. When given with
+           cache_index, the fresh k/v are inserted at that slot index
+           (decode), and attention runs over the whole cache.
+    Returns y (and updated cache / fresh kv when requested).
+    """
+    b, s, _ = x.shape
+    fused_proj = "wqkv" in params
+    head_dim = (params["wqkv"].shape[1] // (n_heads + 2 * n_kv_heads)
+                if fused_proj else params["wq"].shape[1] // n_heads)
+    kv_src = x if kv_x is None else kv_x
+
+    if fused_proj:
+        assert kv_x is None, "fused qkv is self-attention only"
+        fused = x @ params["wqkv"].astype(x.dtype)
+        if "bqkv" in params:
+            fused = fused + params["bqkv"].astype(x.dtype)
+        nq = n_heads * head_dim
+        nkv = n_kv_heads * head_dim
+        q = fused[..., :nq].reshape(x.shape[:-1] + (n_heads, head_dim))
+        k = fused[..., nq:nq + nkv].reshape(
+            x.shape[:-1] + (n_kv_heads, head_dim))
+        v = fused[..., nq + nkv:].reshape(
+            x.shape[:-1] + (n_kv_heads, head_dim))
+        if kv_override is not None:
+            k = kv_override["k"].astype(x.dtype)
+            v = kv_override["v"].astype(x.dtype)
+            if kv_positions is None and "pos" in kv_override:
+                kv_positions = kv_override["pos"]
+    else:
+        q = _project(params, "q", x, n_heads, head_dim)
+        if kv_override is not None:
+            # Pre-projected keys/values (e.g. cross-attention decode against
+            # a prefilled encoder cache) — skip the k/v projections entirely.
+            k = kv_override["k"].astype(x.dtype)
+            v = kv_override["v"].astype(x.dtype)
+            if kv_positions is None and "pos" in kv_override:
+                kv_positions = kv_override["pos"]
+        else:
+            k = _project(params, "k", kv_src, n_kv_heads, head_dim)
+            v = _project(params, "v", kv_src, n_kv_heads, head_dim)
+
+    if qk_norm:
+        q = rmsnorm_apply(params["q_norm"], q)
+        if kv_override is None:
+            k = rmsnorm_apply(params["k_norm"], k)
+
+    if q_positions is None:
+        q_positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    if kv_positions is None:
+        kv_positions = (
+            q_positions if kv_x is None
+            else jnp.broadcast_to(jnp.arange(kv_src.shape[1], dtype=jnp.int32),
+                                  (b, kv_src.shape[1])))
+
+    if inv_freq is not None:
+        q = apply_rope(q, q_positions, inv_freq)
+        if kv_override is None:  # overridden k already carries its rotation
+            k = apply_rope(k, kv_positions, inv_freq)
+
+    k_valid = None
+    if cache is not None:
+        assert cache_index is not None, "decode requires cache_index"
+        # Insert the fresh kv at slot cache_index (ring-buffer for SWA).
+        slot = cache_index % cache["k"].shape[1] if window is not None else cache_index
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+        pos_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], kv_positions.astype(cache["pos"].dtype), slot, axis=1)
+        valid_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["valid"], jnp.ones((b, s), dtype=bool), slot, axis=1)
+        new_cache = {"k": k_cache, "v": v_cache, "pos": pos_cache, "valid": valid_cache}
+        k, v = k_cache.astype(q.dtype), v_cache.astype(q.dtype)
+        kv_positions = pos_cache
+        k_valid = valid_cache
+    else:
+        new_cache = None
+
+    group = n_heads // n_kv_heads
+    t = k.shape[1]
+    scale = head_dim ** -0.5
+
+    use_flash = (extra_mask is None and cache is None
+                 and s * t >= _FLASH_THRESHOLD)
+    if use_flash:
+        if flash_repeat_kv and group > 1:
+            # repeat k/v to full heads: (b, H, s, hd) lays out with the
+            # head axis shardable over the tensor-parallel mesh axis even
+            # when n_kv_heads doesn't divide it (GQA kv=8 vs model=16).
+            kr = jnp.repeat(k, group, axis=2)
+            vr = jnp.repeat(v, group, axis=2)
+            qf = _pin_heads(jnp.moveaxis(q, 1, 2))       # (b, H, s, hd)
+            kf = _pin_heads(jnp.moveaxis(kr, 1, 2))
+            vf = _pin_heads(jnp.moveaxis(vr, 1, 2))
+            qpos_f = q_positions[:, None, :]
+            kpos_f = kv_positions[:, None, :]
+            kval_f = None if k_valid is None else k_valid[:, None, :]
+            ctx = _pin_heads(flash_attention_ref(
+                qf, kf, vf, qpos_f, kpos_f, kval_f, scale,
+                causal, window, 512, k_valid is not None))
+            ctx = jnp.moveaxis(ctx, 1, 2).reshape(
+                b, s, n_heads * head_dim).astype(x.dtype)
+        else:
+            # (b, kv, g*s, hd) queries against unreplicated (b, kv, t, hd)
+            # kv — blockwise online softmax, no (s, t) scores, no k repeat.
+            qg = q.reshape(b, s, n_kv_heads, group, head_dim)
+            qf = jnp.moveaxis(qg, 1, 3).reshape(
+                b, n_kv_heads, group * s, head_dim)
+            kf = jnp.moveaxis(k, 1, 2)                   # (b, kv, t, hd)
+            vf = jnp.moveaxis(v, 1, 2)
+            qpos_f = jnp.broadcast_to(
+                q_positions[:, None, None, :], (b, 1, group, s)).reshape(
+                b, 1, group * s)
+            kpos_f = kv_positions[:, None, :]
+            kval_f = None if k_valid is None else k_valid[:, None, :]
+            ctx = flash_attention_ref(
+                qf, kf, vf, qpos_f, kpos_f, kval_f, scale,
+                causal, window, 512, k_valid is not None)
+            ctx = jnp.moveaxis(
+                ctx.reshape(b, n_kv_heads, group, s, head_dim), 3, 1)
+            ctx = ctx.reshape(b, s, n_heads * head_dim).astype(x.dtype)
+    else:
+        mask = build_mask(q_positions, kv_positions, causal=causal,
+                          window=window, k_valid=k_valid)  # (b, q, k)
+        if extra_mask is not None:
+            mask = mask + extra_mask
+        qg = q.reshape(b, s, n_kv_heads, group, head_dim)
+        logits = jnp.einsum("bsngh,btnh->bnsgt", qg.astype(jnp.float32),
+                            k.astype(jnp.float32)) * scale
+        logits = logits + mask[:, None, :, None, :]
+        probs = jax.nn.softmax(logits, axis=-1)
+        ctx = jnp.einsum("bnsgt,btnh->bsngh", probs, v.astype(jnp.float32))
+        ctx = ctx.reshape(b, s, n_heads * head_dim).astype(x.dtype)
+
+    y = ctx @ params["wo"].astype(x.dtype)
+    if "bo" in params:
+        y = y + params["bo"].astype(x.dtype)
+
+    if cache is not None:
+        return y, new_cache
+    if return_kv:
+        return y, {"k": k, "v": v}
+    return y

@@ -1,0 +1,50 @@
+"""2-D convolutions for the paper's DCGAN model (NHWC layout)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import initializers
+
+
+def conv2d_init(key, c_in: int, c_out: int, kernel: int, *, use_bias: bool = False,
+                dtype=jnp.float32):
+    params = {"w": initializers.dcgan_conv(
+        key, (kernel, kernel, c_in, c_out), dtype=dtype)}
+    if use_bias:
+        params["b"] = jnp.zeros((c_out,), dtype=dtype)
+    return params
+
+
+def conv2d_apply(params, x, *, stride: int = 2, padding: int = 1):
+    y = jax.lax.conv_general_dilated(
+        x, params["w"].astype(x.dtype),
+        window_strides=(stride, stride),
+        padding=((padding, padding), (padding, padding)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    if "b" in params:
+        y = y + params["b"].astype(x.dtype)
+    return y
+
+
+def conv_transpose2d_init(key, c_in: int, c_out: int, kernel: int, *,
+                          use_bias: bool = False, dtype=jnp.float32):
+    params = {"w": initializers.dcgan_conv(
+        key, (kernel, kernel, c_in, c_out), dtype=dtype)}  # HWIO
+    if use_bias:
+        params["b"] = jnp.zeros((c_out,), dtype=dtype)
+    return params
+
+
+def conv_transpose2d_apply(params, x, *, stride: int = 2, padding: int = 1):
+    """Fractionally-strided conv (PyTorch ConvTranspose2d semantics):
+    out = (in - 1) * stride - 2 * padding + kernel."""
+    kernel = params["w"].shape[0]
+    y = jax.lax.conv_transpose(
+        x, params["w"].astype(x.dtype),
+        strides=(stride, stride),
+        padding=((kernel - 1 - padding, kernel - 1 - padding),) * 2,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    if "b" in params:
+        y = y + params["b"].astype(x.dtype)
+    return y

@@ -1,0 +1,23 @@
+"""Token embedding table."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import initializers
+
+
+def embedding_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return {"table": initializers.normal(key, (vocab, d), stddev=0.02, dtype=dtype)}
+
+
+def embedding_apply(params, token_ids, *, dtype=None):
+    table = params["table"]
+    if dtype is not None:
+        table = table.astype(dtype)
+    return jnp.take(table, token_ids, axis=0)
+
+
+def embedding_attend(params, x):
+    """Tied readout: project hidden states onto the embedding table."""
+    return x @ params["table"].astype(x.dtype).T

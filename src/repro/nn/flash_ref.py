@@ -1,0 +1,166 @@
+"""Memory-efficient (flash) attention in pure jnp with a custom VJP.
+
+Never materializes the (s_q, s_k) score matrix: the forward pass scans
+KV blocks with an online softmax; the backward pass (FlashAttention-2
+style) rescans blocks, recomputing block scores from the saved
+(q, k, v, out, lse). Exact — not an approximation.
+
+Used as (a) the training-path attention for long sequences (the naive
+path allocates b*h*s^2 floats, ~3 GB/layer/chip for the 4k shapes) and
+(b) the numerical oracle for the Pallas TPU kernel
+(repro.kernels.flash_attn).
+
+Layout: q (b, h, sq, d); k, v (b, h, sk, d). GQA callers fold the group
+into the query-length axis so k/v are never repeated.
+Masking is positional: causal, sliding window, and a key-validity mask,
+all computed blockwise from integer positions.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _block_bias(q_pos, k_pos, causal: bool, window: Optional[int], k_valid):
+    """(..., sq, bk) additive f32 bias for one KV block."""
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    allowed = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), dtype=bool)
+    if causal:
+        allowed &= kp <= qp
+    if window is not None:
+        allowed &= kp > qp - window
+    if k_valid is not None:
+        allowed &= k_valid[..., None, :]
+    return jnp.where(allowed, 0.0, NEG_INF)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9, 10))
+def flash_attention_ref(q, k, v, q_pos, k_pos, k_valid, scale,
+                        causal: bool = True, window: Optional[int] = None,
+                        block_k: int = 512, use_valid: bool = False):
+    out, _lse = _flash_fwd_inner(q, k, v, q_pos, k_pos, k_valid, scale,
+                                 causal, window, block_k, use_valid)
+    return out
+
+
+def _flash_fwd_inner(q, k, v, q_pos, k_pos, k_valid, scale,
+                     causal, window, block_k, use_valid):
+    b_shape = q.shape[:-2]
+    sq, d = q.shape[-2:]
+    sk = k.shape[-2]
+    bk = min(block_k, sk)
+    pad = (-sk) % bk
+    if pad:
+        k = jnp.pad(k, [(0, 0)] * (k.ndim - 2) + [(0, pad), (0, 0)])
+        v = jnp.pad(v, [(0, 0)] * (v.ndim - 2) + [(0, pad), (0, 0)])
+        k_pos = jnp.pad(k_pos, [(0, 0)] * (k_pos.ndim - 1) + [(0, pad)],
+                        constant_values=jnp.iinfo(jnp.int32).max)
+        if k_valid is None:
+            k_valid = jnp.ones(k_pos.shape, dtype=bool).at[..., sk:].set(False)
+            use_valid = True
+        else:
+            k_valid = jnp.pad(k_valid,
+                              [(0, 0)] * (k_valid.ndim - 1) + [(0, pad)])
+    n_blocks = k.shape[-2] // bk
+
+    qf = q.astype(jnp.float32) * scale
+
+    def body(carry, i):
+        acc, m_run, l_run = carry
+        sl = (i * bk, bk)
+        kb = jax.lax.dynamic_slice_in_dim(k, sl[0], bk, axis=-2)
+        vb = jax.lax.dynamic_slice_in_dim(v, sl[0], bk, axis=-2)
+        kpb = jax.lax.dynamic_slice_in_dim(k_pos, sl[0], bk, axis=-1)
+        kvb = (jax.lax.dynamic_slice_in_dim(k_valid, sl[0], bk, axis=-1)
+               if use_valid and k_valid is not None else None)
+        s = jnp.einsum("...qd,...kd->...qk", qf, kb.astype(jnp.float32))
+        s = s + _block_bias(q_pos, kpb, causal, window, kvb)
+        m_new = jnp.maximum(m_run, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_run - m_new)
+        l_new = alpha * l_run + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "...qk,...kd->...qd", p, vb.astype(jnp.float32))
+        return (acc, m_new, l_new), None
+
+    acc0 = jnp.zeros(b_shape + (sq, d), dtype=jnp.float32)
+    m0 = jnp.full(b_shape + (sq,), -jnp.inf, dtype=jnp.float32)
+    l0 = jnp.zeros(b_shape + (sq,), dtype=jnp.float32)
+    (acc, m_run, l_run), _ = jax.lax.scan(
+        body, (acc0, m0, l0), jnp.arange(n_blocks))
+    l_safe = jnp.maximum(l_run, 1e-30)
+    out = (acc / l_safe[..., None]).astype(q.dtype)
+    lse = m_run + jnp.log(l_safe)
+    return out, lse
+
+
+def _flash_fwd(q, k, v, q_pos, k_pos, k_valid, scale,
+               causal, window, block_k, use_valid):
+    out, lse = _flash_fwd_inner(q, k, v, q_pos, k_pos, k_valid, scale,
+                                causal, window, block_k, use_valid)
+    return out, (q, k, v, q_pos, k_pos, k_valid, scale, out, lse)
+
+
+def _flash_bwd(causal, window, block_k, use_valid, res, dout):
+    q, k, v, q_pos, k_pos, k_valid, scale, out, lse = res
+    sk = k.shape[-2]
+    bk = min(block_k, sk)
+    pad = (-sk) % bk
+    kp, vp = k, v
+    kpos_p, kval_p = k_pos, k_valid
+    if pad:
+        kp = jnp.pad(k, [(0, 0)] * (k.ndim - 2) + [(0, pad), (0, 0)])
+        vp = jnp.pad(v, [(0, 0)] * (v.ndim - 2) + [(0, pad), (0, 0)])
+        kpos_p = jnp.pad(k_pos, [(0, 0)] * (k_pos.ndim - 1) + [(0, pad)],
+                         constant_values=jnp.iinfo(jnp.int32).max)
+        if k_valid is not None:
+            kval_p = jnp.pad(k_valid,
+                             [(0, 0)] * (k_valid.ndim - 1) + [(0, pad)])
+    n_blocks = kp.shape[-2] // bk
+
+    qf = q.astype(jnp.float32) * scale
+    dof = dout.astype(jnp.float32)
+    # delta = rowsum(dO * O)
+    delta = jnp.sum(dof * out.astype(jnp.float32), axis=-1)
+
+    def body(carry, i):
+        dq_acc, dk_acc, dv_acc = carry
+        kb = jax.lax.dynamic_slice_in_dim(kp, i * bk, bk, axis=-2)
+        vb = jax.lax.dynamic_slice_in_dim(vp, i * bk, bk, axis=-2)
+        kpb = jax.lax.dynamic_slice_in_dim(kpos_p, i * bk, bk, axis=-1)
+        kvb = (jax.lax.dynamic_slice_in_dim(kval_p, i * bk, bk, axis=-1)
+               if use_valid and kval_p is not None else None)
+        s = jnp.einsum("...qd,...kd->...qk", qf, kb.astype(jnp.float32))
+        s = s + _block_bias(q_pos, kpb, causal, window, kvb)
+        p = jnp.exp(s - lse[..., None])                      # exact probs
+        dp = jnp.einsum("...qd,...kd->...qk", dof, vb.astype(jnp.float32))
+        ds = p * (dp - delta[..., None])
+        dq_acc = dq_acc + jnp.einsum("...qk,...kd->...qd", ds,
+                                     kb.astype(jnp.float32)) * scale
+        dkb = jnp.einsum("...qk,...qd->...kd", ds, qf)
+        dvb = jnp.einsum("...qk,...qd->...kd", p, dof)
+        dk_acc = jax.lax.dynamic_update_slice_in_dim(
+            dk_acc, dkb.astype(dk_acc.dtype), i * bk, axis=-2)
+        dv_acc = jax.lax.dynamic_update_slice_in_dim(
+            dv_acc, dvb.astype(dv_acc.dtype), i * bk, axis=-2)
+        return (dq_acc, dk_acc, dv_acc), None
+
+    dq0 = jnp.zeros(q.shape, dtype=jnp.float32)
+    dk0 = jnp.zeros(kp.shape, dtype=jnp.float32)
+    dv0 = jnp.zeros(vp.shape, dtype=jnp.float32)
+    (dq, dk, dv), _ = jax.lax.scan(body, (dq0, dk0, dv0),
+                                   jnp.arange(n_blocks))
+    if pad:
+        dk = dk[..., :sk, :]
+        dv = dv[..., :sk, :]
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            None, None, None, None)
+
+
+flash_attention_ref.defvjp(_flash_fwd, _flash_bwd)

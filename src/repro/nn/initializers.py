@@ -1,0 +1,39 @@
+"""Parameter initializers (pure functions of a PRNG key and a shape)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def normal(key, shape, stddev: float = 0.02, dtype=jnp.float32):
+    return stddev * jax.random.normal(key, shape, dtype=dtype)
+
+
+def zeros(_key, shape, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype=dtype)
+
+
+def ones(_key, shape, dtype=jnp.float32):
+    return jnp.ones(shape, dtype=dtype)
+
+
+def lecun_normal(key, shape, fan_in: int | None = None, dtype=jnp.float32):
+    """Variance-scaling init with fan-in taken from the first axis by default."""
+    if fan_in is None:
+        fan_in = shape[0] if len(shape) > 1 else 1
+    stddev = 1.0 / math.sqrt(max(fan_in, 1))
+    return stddev * jax.random.normal(key, shape, dtype=dtype)
+
+
+def xavier_uniform(key, shape, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) > 1 else 1
+    fan_out = shape[-1]
+    limit = math.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, shape, minval=-limit, maxval=limit, dtype=dtype)
+
+
+def dcgan_conv(key, shape, dtype=jnp.float32):
+    """DCGAN paper init: N(0, 0.02) for all conv weights [Radford et al.]."""
+    return 0.02 * jax.random.normal(key, shape, dtype=dtype)

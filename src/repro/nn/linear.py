@@ -1,0 +1,23 @@
+"""Dense projection."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+from repro.nn import initializers
+
+
+def linear_init(key, d_in: int, d_out: int, *, use_bias: bool = True,
+                init=initializers.lecun_normal, dtype=jnp.float32):
+    kw, _ = jax.random.split(key)
+    params = {"w": init(kw, (d_in, d_out), dtype=dtype)}
+    if use_bias:
+        params["b"] = jnp.zeros((d_out,), dtype=dtype)
+    return params
+
+
+def linear_apply(params, x):
+    y = x @ params["w"].astype(x.dtype)
+    if "b" in params:
+        y = y + params["b"].astype(x.dtype)
+    return y

@@ -1,0 +1,56 @@
+"""Feed-forward blocks: SwiGLU (LLM default) and GELU (whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import initializers
+
+
+def mlp_init(key, d_model: int, d_ff: int, *, gated: bool = True,
+             use_bias: bool = False, fuse_gate: bool = False,
+             dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    if gated and fuse_gate:
+        # fused [in | gate]: one matmul fwd, one dx all-reduce bwd under TP
+        params = {
+            "w_inga": initializers.lecun_normal(ks[0], (d_model, 2 * d_ff),
+                                                dtype=dtype),
+            "w_out": initializers.lecun_normal(ks[1], (d_ff, d_model),
+                                               fan_in=d_ff, dtype=dtype),
+        }
+        if use_bias:
+            params["b_inga"] = jnp.zeros((2 * d_ff,), dtype=dtype)
+            params["b_out"] = jnp.zeros((d_model,), dtype=dtype)
+        return params
+    params = {
+        "w_in": initializers.lecun_normal(ks[0], (d_model, d_ff), dtype=dtype),
+        "w_out": initializers.lecun_normal(ks[1], (d_ff, d_model), fan_in=d_ff, dtype=dtype),
+    }
+    if gated:
+        params["w_gate"] = initializers.lecun_normal(ks[2], (d_model, d_ff), dtype=dtype)
+    if use_bias:
+        params["b_in"] = jnp.zeros((d_ff,), dtype=dtype)
+        params["b_out"] = jnp.zeros((d_model,), dtype=dtype)
+    return params
+
+
+def mlp_apply(params, x):
+    if "w_inga" in params:
+        fused = x @ params["w_inga"].astype(x.dtype)
+        if "b_inga" in params:
+            fused = fused + params["b_inga"].astype(x.dtype)
+        d_ff = fused.shape[-1] // 2
+        h = jax.nn.silu(fused[..., d_ff:]) * fused[..., :d_ff]
+    else:
+        h = x @ params["w_in"].astype(x.dtype)
+        if "b_in" in params:
+            h = h + params["b_in"].astype(x.dtype)
+        if "w_gate" in params:
+            h = jax.nn.silu(x @ params["w_gate"].astype(x.dtype)) * h
+        else:
+            h = jax.nn.gelu(h)
+    y = h @ params["w_out"].astype(x.dtype)
+    if "b_out" in params:
+        y = y + params["b_out"].astype(x.dtype)
+    return y

@@ -1,0 +1,174 @@
+"""Mixture-of-experts feed-forward with top-k routing.
+
+Baseline dispatch is the GShard/Switch formulation: tokens are split into
+groups; within a group, a one-hot dispatch tensor (g, t, E, C) routes at
+most C tokens to each expert via einsum. Under GSPMD with experts sharded
+on the `model` axis this lowers to the canonical all-to-all pattern.
+
+A sort-based (gather/scatter) dispatch lives alongside as the
+memory-lean variant — see `moe_apply(..., dispatch="sort")`; the §Perf
+hillclimb compares the two.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import initializers
+from repro.nn.mlp import mlp_init, mlp_apply
+
+# max T*top_k for the exact (worst-case-buffer) dropless sort dispatch
+_DROPLESS_EXACT_LIMIT = 4096
+
+# optional sharding pin for dispatched expert tensors (set by
+# launch/variants): "replicated" keeps expert_in/out unsharded within the
+# device group so the expert matmuls contract the TP dim with one partial
+# -sum all-reduce instead of GSPMD re-gathering dispatch tensors.
+CONSTRAIN_DISPATCH = None
+
+
+def _pin_dispatch(t):
+    if CONSTRAIN_DISPATCH != "replicated":
+        return t
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(t, P(*([None] * t.ndim)))
+
+
+def moe_init(key, d_model: int, d_ff: int, n_experts: int, *, dtype=jnp.float32):
+    k_router, k_experts = jax.random.split(key)
+    expert_keys = jax.random.split(k_experts, n_experts)
+    experts = jax.vmap(
+        lambda k: mlp_init(k, d_model, d_ff, gated=True, dtype=dtype))(expert_keys)
+    return {
+        "router": initializers.lecun_normal(k_router, (d_model, n_experts), dtype=dtype),
+        "experts": experts,  # leaves have leading (E,) axis
+    }
+
+
+def _route(params, x2d, n_experts: int, top_k: int):
+    """Router logits -> (gates, expert one-hots, aux loss terms)."""
+    logits = x2d.astype(jnp.float32) @ params["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                      # (T, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)          # (T, K)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+    # Load-balance loss (Switch): E * sum_e mean(frac_tokens_e) * mean(prob_e)
+    chosen = jax.nn.one_hot(expert_idx, n_experts, dtype=jnp.float32)  # (T,K,E)
+    frac = chosen.sum(1).mean(0)                                 # (E,)
+    aux = n_experts * jnp.sum(frac * probs.mean(0))
+    return probs, gate_vals, expert_idx, chosen, aux
+
+
+def moe_apply(params, x, *, n_experts: int, top_k: int,
+              capacity_factor: float = 1.25, group_size: int = 2048,
+              dispatch: str = "einsum", dropless: bool = False):
+    """x: (b, s, d) -> (y: (b, s, d), aux_loss: scalar).
+
+    dropless=True routes every (token, slot) pair exactly (sort dispatch
+    with full per-expert capacity) — the serving-decode path, where
+    capacity drops would change results batch-dependently. Exact
+    worst-case buffers are (E, T*top_k, d), so this is only used for
+    small token counts (decode steps); large-T serving (prefill) falls
+    back to the grouped capacity dispatch with a generous factor, which
+    shards cleanly over the token axis.
+    """
+    if dropless:
+        if x.shape[0] * x.shape[1] * top_k <= _DROPLESS_EXACT_LIMIT:
+            dispatch = "sort"
+        else:
+            dispatch = "einsum"
+            capacity_factor = max(capacity_factor, 2.0)
+            dropless = False
+    b, s, d = x.shape
+    x2d = x.reshape(b * s, d)
+    t_total = b * s
+    gs = min(group_size, t_total)
+    # pad so groups divide evenly
+    n_groups = math.ceil(t_total / gs)
+    pad = n_groups * gs - t_total
+    if pad:
+        x2d = jnp.pad(x2d, ((0, pad), (0, 0)))
+    probs, gates, expert_idx, chosen, aux = _route(params, x2d, n_experts, top_k)
+    capacity = max(1, int(gs * capacity_factor * top_k / n_experts))
+    capacity = min(capacity, gs)
+
+    if dispatch == "einsum":
+        y2d = _dispatch_einsum(params, x2d, gates, chosen, n_groups, gs,
+                               n_experts, top_k, capacity)
+    elif dispatch == "sort":
+        cap_total = x2d.shape[0] * top_k if dropless else capacity * n_groups
+        y2d = _dispatch_sort(params, x2d, gates, expert_idx,
+                             n_experts, top_k, cap_total)
+    else:
+        raise ValueError(f"unknown dispatch {dispatch!r}")
+
+    if pad:
+        y2d = y2d[:t_total]
+    return y2d.reshape(b, s, d).astype(x.dtype), aux
+
+
+def _dispatch_einsum(params, x2d, gates, chosen, n_groups, gs,
+                     n_experts, top_k, capacity):
+    d = x2d.shape[-1]
+    xg = x2d.reshape(n_groups, gs, d)
+    chosen_g = chosen.reshape(n_groups, gs, top_k, n_experts)
+    gates_g = gates.reshape(n_groups, gs, top_k)
+
+    # Position of each (token, slot) within its expert queue, slot-major so
+    # first-choice assignments win capacity, as in GShard.
+    # cumulative count over (slot, token) ordering:
+    flat = jnp.swapaxes(chosen_g, 1, 2).reshape(n_groups, top_k * gs, n_experts)
+    pos_flat = jnp.cumsum(flat, axis=1) - flat                  # (g, K*t, E)
+    pos = jnp.swapaxes(pos_flat.reshape(n_groups, top_k, gs, n_experts), 1, 2)
+    keep = (pos < capacity) & (chosen_g > 0)                    # (g, t, K, E)
+    pos = jnp.sum(pos * chosen_g, axis=-1)                      # (g, t, K)
+
+    pos_oh = jax.nn.one_hot(jnp.where(keep.any(-1), pos, capacity),
+                            capacity, dtype=x2d.dtype)          # (g, t, K, C)
+    disp = jnp.einsum("gtke,gtkc->gtec", chosen_g.astype(x2d.dtype) *
+                      keep.astype(x2d.dtype), pos_oh)           # (g, t, E, C)
+    comb = jnp.einsum("gtke,gtkc,gtk->gtec",
+                      chosen_g.astype(jnp.float32) * keep.astype(jnp.float32),
+                      pos_oh.astype(jnp.float32), gates_g.astype(jnp.float32))
+
+    expert_in = _pin_dispatch(
+        jnp.einsum("gtec,gtd->egcd", disp, xg))                  # (E, g, C, d)
+    expert_out = _pin_dispatch(
+        jax.vmap(mlp_apply)(params["experts"], expert_in))
+    y = jnp.einsum("gtec,egcd->gtd", comb.astype(expert_out.dtype), expert_out)
+    return y.reshape(n_groups * gs, d)
+
+
+def _dispatch_sort(params, x2d, gates, expert_idx, n_experts, top_k, capacity_total):
+    """Memory-lean dispatch: sort (token, slot) pairs by expert, gather a
+    fixed per-expert buffer, run experts, scatter-add back with gates."""
+    t = x2d.shape[0]
+    flat_expert = expert_idx.reshape(-1)                        # (T*K,)
+    flat_gate = gates.reshape(-1)
+    flat_token = jnp.repeat(jnp.arange(t), top_k)
+    order = jnp.argsort(flat_expert, stable=True)
+    se, st, sg = flat_expert[order], flat_token[order], flat_gate[order]
+    # position within expert = rank - start_of_expert
+    counts = jnp.bincount(se, length=n_experts)
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(se.shape[0])
+    pos_in_e = rank - starts[se]
+    cap = min(capacity_total, se.shape[0])
+    keep = pos_in_e < cap
+    # scatter (expert, pos) -> source row; dropped entries park at a dummy row
+    buf_idx = jnp.where(keep, se * cap + pos_in_e, n_experts * cap)
+    src = jnp.zeros((n_experts * cap + 1,), dtype=jnp.int32).at[buf_idx].set(
+        st.astype(jnp.int32), mode="drop")
+    filled = jnp.zeros((n_experts * cap + 1,), dtype=bool).at[buf_idx].set(
+        keep, mode="drop")
+    expert_in = x2d[src[:-1]].reshape(n_experts, cap, -1)
+    expert_in = expert_in * filled[:-1].reshape(n_experts, cap, 1).astype(x2d.dtype)
+    expert_out = jax.vmap(mlp_apply)(params["experts"], expert_in)
+    flat_out = expert_out.reshape(n_experts * cap, -1)
+    contrib = jnp.where(keep, sg, 0.0)[:, None].astype(flat_out.dtype)
+    safe_buf = jnp.minimum(buf_idx, n_experts * cap - 1)
+    gathered = flat_out[safe_buf] * contrib
+    y = jnp.zeros_like(x2d).at[st].add(gathered.astype(x2d.dtype), mode="drop")
+    return y

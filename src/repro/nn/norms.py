@@ -1,0 +1,52 @@
+"""Normalization layers: RMSNorm (LLM backbones), LayerNorm (whisper),
+BatchNorm (DCGAN — batch-statistics mode, as used during GAN training)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm_apply(params, x, *, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * (var + eps) ** -0.5
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype=dtype), "bias": jnp.zeros((d,), dtype=dtype)}
+
+
+def layernorm_apply(params, x, *, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mean) * (var + eps) ** -0.5
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def batchnorm_init(c: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((c,), dtype=dtype), "bias": jnp.zeros((c,), dtype=dtype)}
+
+
+def batchnorm_apply(params, x, *, eps: float = 1e-5):
+    """BatchNorm over (N, H, W) for NHWC inputs using batch statistics.
+
+    GAN training always normalizes with the current batch (DCGAN setup);
+    we deliberately carry no running statistics — generation-time batches
+    are normalized the same way, matching the reference DCGAN recipe.
+    """
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    axes = tuple(range(x.ndim - 1))
+    mean = jnp.mean(x, axis=axes, keepdims=True)
+    var = jnp.var(x, axis=axes, keepdims=True)
+    y = (x - mean) * (var + eps) ** -0.5
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(dtype)

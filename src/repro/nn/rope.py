@@ -1,0 +1,24 @@
+"""Rotary position embeddings."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_frequencies(head_dim: int, *, base: float = 10000.0):
+    """Inverse frequencies for RoPE; head_dim must be even."""
+    assert head_dim % 2 == 0, "RoPE head_dim must be even"
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (base ** exponent)  # (head_dim // 2,)
+
+
+def apply_rope(x, positions, inv_freq):
+    """Rotate pairs of channels.
+
+    x: (..., seq, heads, head_dim); positions: (..., seq) int32.
+    """
+    angles = positions[..., :, None].astype(jnp.float32) * inv_freq  # (..., s, hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

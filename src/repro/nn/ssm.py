@@ -1,0 +1,233 @@
+"""Mamba-2 SSD (state-space duality) mixer [arXiv:2405.21060].
+
+`ssd_scan_ref` is the pure-jnp chunked scan — the oracle for the Pallas
+kernel in `repro.kernels.ssd_scan` and the CPU execution path.
+
+Layout conventions:
+  x   (b, s, h, p)   per-head inputs, p = head_dim
+  dt  (b, s, h)      softplus-processed step sizes
+  A   (h,)           negative per-head decay rates
+  B,C (b, s, g, n)   per-group input/output projections, n = d_state
+  state (b, h, n, p)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import initializers
+from repro.nn.norms import rmsnorm_init, rmsnorm_apply
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD scan (reference)
+# ---------------------------------------------------------------------------
+
+def _expand_groups(bc, n_heads):
+    """(b, s, g, n) -> (b, s, h, n) by repeating groups across their heads."""
+    g = bc.shape[2]
+    assert n_heads % g == 0
+    return jnp.repeat(bc, n_heads // g, axis=2)
+
+
+def ssd_scan_ref(x, dt, A, B, C, *, chunk: int = 128,
+                 initial_state=None, return_final_state: bool = False):
+    """Chunked SSD scan: h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t^T,
+    y_t = C_t h_t. All math in float32."""
+    in_dtype = x.dtype
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    x = x.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    B = _expand_groups(B.astype(jnp.float32), h)
+    C = _expand_groups(C.astype(jnp.float32), h)
+
+    chunk = min(chunk, s)
+    orig_s = s
+    if s % chunk:
+        # pad with dt=0 steps: decay=exp(0)=1, no input — state is unchanged
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        s = s + pad
+    nc = s // chunk
+
+    def to_chunks(t):
+        return t.reshape((b, nc, chunk) + t.shape[2:])
+
+    xc, dtc, Bc, Cc = map(to_chunks, (x, dt, B, C))
+    causal = jnp.tril(jnp.ones((chunk, chunk), dtype=bool))
+
+    if initial_state is None:
+        s0 = jnp.zeros((b, h, n, p), dtype=jnp.float32)
+    else:
+        s0 = initial_state.astype(jnp.float32)
+
+    def chunk_step(state, inp):
+        """One chunk: quadratic within-chunk term + state recurrence.
+
+        Scanning over chunks keeps the (l, l) score block O(1) in live
+        memory — the long-sequence prefill path depends on this.
+        """
+        xk, dtk, Bk, Ck = inp                          # (b, l, ...)
+        xdt = xk * dtk[..., None]                      # (b, l, h, p)
+        a = dtk * A.astype(jnp.float32)                # (b, l, h)
+        cs = jnp.cumsum(a, axis=1)                     # (b, l, h)
+        seg = cs[:, :, None, :] - cs[:, None, :, :]    # (b, l, l, h)
+        L = jnp.where(causal[None, :, :, None], jnp.exp(seg), 0.0)
+        y_diag = jnp.einsum("blhn,bshn,blsh,bshp->blhp", Ck, Bk, L, xdt)
+        # carried-state contribution
+        y_off = jnp.einsum("blhn,bhnp,blh->blhp", Ck, state, jnp.exp(cs))
+        # state update
+        decay_states = jnp.exp(cs[:, -1:, :] - cs)     # (b, l, h)
+        total = jnp.exp(cs[:, -1, :])                  # (b, h)
+        new_state = (total[..., None, None] * state
+                     + jnp.einsum("bshn,bsh,bshp->bhnp", Bk, decay_states,
+                                  xdt))
+        return new_state, (y_diag + y_off)
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (xc, dtc, Bc, Cc))
+    final_state, ys = jax.lax.scan(chunk_step, s0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, p)[:, :orig_s]
+    y = y.astype(in_dtype)
+    if return_final_state:
+        return y, final_state
+    return y
+
+
+def ssd_decode_step(state, x, dt, A, B, C):
+    """Single-token recurrent update. x: (b, h, p); B, C: (b, g, n);
+    state: (b, h, n, p). Returns (y, new_state)."""
+    h = x.shape[1]
+    Bh = _expand_groups(B.astype(jnp.float32)[:, None], h)[:, 0]  # (b, h, n)
+    Ch = _expand_groups(C.astype(jnp.float32)[:, None], h)[:, 0]
+    dt = dt.astype(jnp.float32)
+    decay = jnp.exp(dt * A.astype(jnp.float32))        # (b, h)
+    xdt = x.astype(jnp.float32) * dt[..., None]
+    new_state = (decay[..., None, None] * state.astype(jnp.float32)
+                 + jnp.einsum("bhn,bhp->bhnp", Bh, xdt))
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, new_state)
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba-2 mixer (in_proj -> conv -> SSD -> gated norm -> out_proj)
+# ---------------------------------------------------------------------------
+
+def ssd_mixer_init(key, d_model: int, *, d_state: int, head_dim: int = 64,
+                   expand: int = 2, n_groups: int = 1, d_conv: int = 4,
+                   dtype=jnp.float32):
+    d_inner = expand * d_model
+    assert d_inner % head_dim == 0
+    n_heads = d_inner // head_dim
+    conv_dim = d_inner + 2 * n_groups * d_state
+    d_in_proj = 2 * d_inner + 2 * n_groups * d_state + n_heads
+    ks = jax.random.split(key, 5)
+    params = {
+        "in_proj": initializers.lecun_normal(ks[0], (d_model, d_in_proj), dtype=dtype),
+        "conv_w": initializers.lecun_normal(ks[1], (d_conv, conv_dim),
+                                            fan_in=d_conv, dtype=dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype=dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(dtype),
+        "D": jnp.ones((n_heads,), dtype=dtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[2], (n_heads,),
+                                       minval=jnp.log(1e-3), maxval=jnp.log(1e-1)))
+        )).astype(dtype),
+        "norm": rmsnorm_init(d_inner, dtype=dtype),
+        "out_proj": initializers.lecun_normal(ks[3], (d_inner, d_model),
+                                              fan_in=d_inner, dtype=dtype),
+    }
+    return params
+
+
+def _split_proj(zxbcdt, d_inner, n_groups, d_state, n_heads):
+    sizes = [d_inner, d_inner, n_groups * d_state, n_groups * d_state, n_heads]
+    idx, acc = [], 0
+    for sz in sizes[:-1]:
+        acc += sz
+        idx.append(acc)
+    z, xr, B, C, dt = jnp.split(zxbcdt, idx, axis=-1)
+    return z, xr, B, C, dt
+
+
+def _causal_conv(seq, w, b):
+    """Depthwise causal conv. seq: (b, s, c); w: (k, c)."""
+    k = w.shape[0]
+    pad = jnp.pad(seq, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + seq.shape[1], :] * w[i].astype(seq.dtype)
+              for i in range(k))
+    return out + b.astype(seq.dtype)
+
+
+def ssd_mixer_apply(params, x, *, d_state: int, head_dim: int = 64,
+                    expand: int = 2, n_groups: int = 1, chunk: int = 128,
+                    state: Optional[dict] = None, scan_impl=None,
+                    return_state: bool = False):
+    """Mamba-2 mixer. x: (b, s, d).
+
+    state: None for training/prefill-from-scratch. For decode pass
+    {"ssm": (b,h,n,p), "conv": (b, k-1, conv_dim)}; s must be 1.
+    Returns y, or (y, new_state) when state is given.
+    scan_impl: optional override for the chunked scan (Pallas kernel hook).
+    """
+    b, s, d_model = x.shape
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    conv_dim = d_inner + 2 * n_groups * d_state
+
+    zxbcdt = x @ params["in_proj"].astype(x.dtype)
+    z, xr, B, C, dt_raw = _split_proj(zxbcdt, d_inner, n_groups, d_state, n_heads)
+    conv_in = jnp.concatenate([xr, B, C], axis=-1)     # (b, s, conv_dim)
+
+    if state is not None:
+        assert s == 1, "decode path expects a single token"
+        window = jnp.concatenate([state["conv"], conv_in], axis=1)
+        new_conv_state = window[:, 1:, :]
+        conv_out = jnp.sum(
+            window * params["conv_w"].astype(x.dtype)[None], axis=1,
+            keepdims=True) + params["conv_b"].astype(x.dtype)
+    else:
+        new_conv_state = None
+        conv_out = _causal_conv(conv_in, params["conv_w"], params["conv_b"])
+    conv_out = jax.nn.silu(conv_out)
+
+    xr, B, C = jnp.split(conv_out,
+                         [d_inner, d_inner + n_groups * d_state], axis=-1)
+    xh = xr.reshape(b, s, n_heads, head_dim)
+    Bh = B.reshape(b, s, n_groups, d_state)
+    Ch = C.reshape(b, s, n_groups, d_state)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    if state is not None:
+        y1, new_ssm = ssd_decode_step(state["ssm"], xh[:, 0], dt[:, 0],
+                                      A, Bh[:, 0], Ch[:, 0])
+        y = y1[:, None]
+        new_state = {"ssm": new_ssm, "conv": new_conv_state}
+    elif return_state:
+        # prefill: emit the decode state (SSM carry + conv tail window)
+        scan = scan_impl if scan_impl is not None else ssd_scan_ref
+        y, final_ssm = scan(xh, dt, A, Bh, Ch, chunk=chunk,
+                            return_final_state=True)
+        k = params["conv_w"].shape[0]
+        new_state = {"ssm": final_ssm, "conv": conv_in[:, s - (k - 1):, :]}
+    else:
+        scan = scan_impl if scan_impl is not None else ssd_scan_ref
+        y = scan(xh, dt, A, Bh, Ch, chunk=chunk)
+        new_state = None
+
+    y = (y.astype(jnp.float32)
+         + params["D"].astype(jnp.float32)[None, None, :, None]
+         * xh.astype(jnp.float32))
+    y = y.reshape(b, s, d_inner)
+    y = rmsnorm_apply(params["norm"], y.astype(x.dtype) * jax.nn.silu(z))
+    y = y @ params["out_proj"].astype(y.dtype)
+    if state is not None or return_state:
+        return y, new_state
+    return y

@@ -1,0 +1,12 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    sgd,
+    momentum,
+    adam,
+    make_optimizer,
+    apply_updates,
+    tree_add,
+    tree_axpy,
+    global_norm,
+)
+from repro.optim.schedules import constant, cosine_decay, warmup_cosine

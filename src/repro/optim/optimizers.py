@@ -1,0 +1,92 @@
+"""Minimal functional optimizers (no external deps).
+
+`Optimizer.update(grads, state, params)` returns `(updates, new_state)`
+where `updates` should be ADDED to params to descend `grads`.
+The paper's Algorithms 1 and 3 use plain mini-batch SGD; Adam/momentum
+are provided for the practical variants and the LM examples.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_axpy(alpha, x, y):
+    """y + alpha * x over pytrees."""
+    return jax.tree.map(lambda xi, yi: yi + alpha * xi.astype(yi.dtype), x, y)
+
+
+def global_norm(tree):
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def apply_updates(params, updates):
+    return tree_add(params, updates)
+
+
+def sgd(lr: float) -> Optimizer:
+    def init(_params):
+        return {}
+
+    def update(grads, state, _params=None):
+        return jax.tree.map(lambda g: -lr * g, grads), state
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: float, beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return {"mu": jax.tree.map(jnp.zeros_like, params)}
+
+    def update(grads, state, _params=None):
+        mu = jax.tree.map(lambda m, g: beta * m + g, state["mu"], grads)
+        return jax.tree.map(lambda m: -lr * m, mu), {"mu": mu}
+
+    return Optimizer(init, update)
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8) -> Optimizer:
+    def init(params):
+        zeros = lambda: jax.tree.map(
+            lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        return {"m": zeros(), "v": zeros(), "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, _params=None):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v, g: b2 * v + (1 - b2)
+                         * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+        updates = jax.tree.map(
+            lambda mi, vi: -lr * (mi / bc1) / (jnp.sqrt(vi / bc2) + eps), m, v)
+        return updates, {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, lr: float, **kw) -> Optimizer:
+    if name == "sgd":
+        return sgd(lr)
+    if name == "momentum":
+        return momentum(lr, **kw)
+    if name == "adam":
+        return adam(lr, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")

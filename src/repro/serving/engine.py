@@ -1,0 +1,147 @@
+"""Batched serving engine for the trained generator-as-LM.
+
+Slot-based continuous batching: a fixed decode batch of B slots; each
+slot holds one request's KV/SSM state inside the shared cache pytree
+(all caches are allocated once at engine construction — decode steps are
+a single jitted call regardless of request mix). Prefill runs per
+request (padded to the slot cache) and its caches are scattered into the
+slot. Greedy or temperature sampling.
+
+This is the runnable CPU-scale counterpart of the decode_32k /
+long_500k dry-run shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import gan
+from repro.models.backbone import init_decode_caches
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # (len,) int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0            # 0 => greedy
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, cfg: ArchConfig, gen_params, *, batch_size: int = 4,
+                 max_len: int = 256, enc_feats_fn: Optional[Callable] = None,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.params = gen_params
+        self.b = batch_size
+        self.max_len = max_len
+        self.enc_feats_fn = enc_feats_fn
+        self.caches = init_decode_caches(cfg, batch_size, max_len,
+                                         dtype=jnp.float32)
+        self.positions = np.zeros(batch_size, dtype=np.int32)  # next index
+        self.slots: list[Optional[Request]] = [None] * batch_size
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+        self.key = jax.random.PRNGKey(seed)
+        self._decode = jax.jit(self._decode_impl)
+        self._prefill = jax.jit(self._prefill_impl,
+                                static_argnames=("plen",))
+
+    # -- jitted bodies --------------------------------------------------
+    def _prefill_impl(self, params, tokens, enc_feats, plen):
+        out = gan.generator_lm_apply(
+            params, self.cfg, tokens, mode="prefill", enc_feats=enc_feats,
+            remat=False, prefill_cache_len=self.max_len)
+        return out["logits"][:, plen - 1, :], out["caches"]
+
+    def _decode_impl(self, params, caches, token, cache_index, enc_feats):
+        out = gan.generator_lm_apply(
+            params, self.cfg, token, mode="decode", caches=caches,
+            cache_index=cache_index, enc_feats=enc_feats, remat=False)
+        return out["logits"][:, 0, :], out["caches"]
+
+    # -- host logic ------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _enc(self, n):
+        return self.enc_feats_fn(n) if self.enc_feats_fn else None
+
+    def _admit(self):
+        for slot in range(self.b):
+            if self.slots[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                plen = len(req.prompt)
+                assert plen + req.max_new_tokens <= self.max_len
+                toks = jnp.asarray(req.prompt, jnp.int32)[None]
+                logits, pre_caches = self._prefill(self.params, toks,
+                                                   self._enc(1), plen=plen)
+                # scatter this request's prefill caches into its slot
+                def place(cache_leaf, pre_leaf):
+                    return cache_leaf.at[:, slot:slot + 1].set(
+                        pre_leaf.astype(cache_leaf.dtype))
+                self.caches = jax.tree.map(place, self.caches, pre_caches)
+                self.positions[slot] = plen
+                first = self._sample(logits[0], req)
+                req.out_tokens.append(int(first))
+                self.slots[slot] = req
+
+    def _sample(self, logits, req: Request):
+        if req.temperature <= 0:
+            return jnp.argmax(logits)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.categorical(sub, logits / req.temperature)
+
+    def step(self):
+        """One engine iteration: admit waiting requests, run one decode
+        step for every active slot, retire finished requests."""
+        self._admit()
+        active = [s for s in range(self.b) if self.slots[s] is not None]
+        if not active:
+            return False
+        # batchwise decode: cache_index must be uniform per call — group
+        # slots by position (simple implementation: run one group per
+        # distinct position per step).
+        positions = {self.positions[s] for s in active}
+        pos = min(positions)
+        group = [s for s in active if self.positions[s] == pos]
+        token = np.zeros((self.b, 1), dtype=np.int32)
+        for s in group:
+            token[s, 0] = self.slots[s].out_tokens[-1]
+        logits, new_caches = self._decode(self.params, self.caches,
+                                          jnp.asarray(token),
+                                          jnp.int32(pos), self._enc(self.b))
+        # the decode call wrote slot `pos` for EVERY batch row; keep the
+        # new caches only for the slots that actually decoded this step.
+        in_group = jnp.asarray([s in group for s in range(self.b)])
+
+        def merge(old, new):
+            # cache leaves are (G, b, ...) — mask over the batch axis
+            m = in_group.reshape((1, self.b) + (1,) * (old.ndim - 2))
+            return jnp.where(m, new.astype(old.dtype), old)
+
+        self.caches = jax.tree.map(merge, self.caches, new_caches)
+        for s in group:
+            req = self.slots[s]
+            nxt = int(self._sample(logits[s], req))
+            req.out_tokens.append(nxt)
+            self.positions[s] = pos + 1
+            if len(req.out_tokens) >= req.max_new_tokens:
+                req.done = True
+                self.finished.append(req)
+                self.slots[s] = None
+        return True
+
+    def run(self, max_steps: int = 10_000):
+        steps = 0
+        while (self.queue or any(self.slots)) and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.finished

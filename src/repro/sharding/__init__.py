@@ -1,0 +1,9 @@
+from repro.sharding.rules import (
+    ParallelismPlan,
+    plan_for,
+    param_specs,
+    cache_specs,
+    state_specs,
+    data_spec,
+    enc_feats_spec,
+)

@@ -1,0 +1,232 @@
+"""Parameter / activation / cache sharding rules.
+
+Megatron-style tensor parallelism on the `model` axis plus optional
+FSDP over the device axes for the largest generators:
+
+  * "in" projections  (wq wk wv w_in w_gate in_proj z_proj router):
+        tensor-parallel on the OUTPUT dim, FSDP on the input dim
+  * "out" projections (wo w_out out_proj lm_head score):
+        tensor-parallel on the INPUT dim, FSDP on the output dim
+  * embedding tables (vocab, d): d over `model` (vocab sizes are not
+        uniformly divisible — e.g. granite's 49155 is odd)
+  * vectors / norms / gates: replicated
+  * expert tensors (G, E, a, b): same in/out rules on (a, b); the expert
+        axis stays unsharded when E doesn't divide the mesh (8, 40 vs 16)
+        — expert-parallel rebalancing is a §Perf hillclimb lever.
+
+Decode caches: batch over device axes when divisible, otherwise the
+sequence/length dim (long_500k's b=1), which makes GSPMD lower a
+distributed flash-decode (sharded softmax reductions + partial-sum
+all-reduce).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, MeshConfig, ShapeConfig
+
+_IN_PROJ = {"wq", "wk", "wv", "w_in", "w_gate", "in_proj", "z_proj",
+            "router", "conv_w", "wqkv", "w_inga"}
+_OUT_PROJ = {"wo", "w_out", "out_proj", "lm_head", "score"}
+_EMBED = {"table"}
+
+# generators at/above this parameter count get FSDP over the device axes
+FSDP_THRESHOLD = 5_000_000_000
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelismPlan:
+    tp_axis: str = "model"
+    fsdp_axes: Optional[Tuple[str, ...]] = None    # e.g. ("data",) or ("pod","data")
+    dev_axes: Tuple[str, ...] = ("data",)          # the paper's device axes
+
+    def axis_size(self, mesh, name) -> int:
+        return mesh.shape[name]
+
+
+def plan_for(cfg: ArchConfig, mesh_cfg: MeshConfig, *,
+             n_params: Optional[int] = None) -> ParallelismPlan:
+    dev_axes = ("pod", "data") if mesh_cfg.multi_pod else ("data",)
+    fsdp = None
+    if mesh_cfg.fsdp or (n_params or _rough_params(cfg)) >= FSDP_THRESHOLD:
+        fsdp = dev_axes
+    return ParallelismPlan(fsdp_axes=fsdp, dev_axes=dev_axes)
+
+
+def _rough_params(cfg: ArchConfig) -> int:
+    d, L = cfg.d_model, cfg.n_layers
+    per_layer = 4 * d * d * (1 if cfg.family in ("ssm",) else 1)
+    if cfg.moe:
+        per_layer += 3 * d * cfg.moe.d_ff_expert * cfg.moe.n_experts
+    else:
+        per_layer += 3 * d * cfg.d_ff
+    return L * per_layer + 2 * cfg.vocab * d
+
+
+def _divisible(dim: int, mesh, axes) -> bool:
+    if axes is None:
+        return False
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return dim > 0 and dim % size == 0
+
+
+def _leaf_spec(path_names, leaf, mesh, plan: ParallelismPlan,
+               fsdp: bool) -> P:
+    name = path_names[-1]
+    shape = leaf.shape
+    ndim = len(shape)
+    tp = plan.tp_axis
+    fsdp_axes = plan.fsdp_axes if fsdp else None
+
+    if ndim <= 1:
+        return P()
+    if name in _EMBED:
+        spec = [None] * ndim
+        if _divisible(shape[-1], mesh, tp):
+            spec[-1] = tp
+        return P(*spec)
+    if name in _IN_PROJ:
+        spec = [None] * ndim
+        if _divisible(shape[-1], mesh, tp):
+            spec[-1] = tp
+        if ndim >= 2 and fsdp_axes and _divisible(shape[-2], mesh, fsdp_axes):
+            spec[-2] = fsdp_axes
+        return P(*spec)
+    if name in _OUT_PROJ:
+        spec = [None] * ndim
+        if ndim >= 2 and _divisible(shape[-2], mesh, tp):
+            spec[-2] = tp
+        if fsdp_axes and _divisible(shape[-1], mesh, fsdp_axes):
+            spec[-1] = fsdp_axes
+        return P(*spec)
+    return P()
+
+
+def param_specs(params, mesh, plan: ParallelismPlan, *, fsdp: bool = False):
+    """Pytree of PartitionSpecs matching `params`."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        names = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
+        specs.append(_leaf_spec(names, leaf, mesh, plan, fsdp))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def stacked_specs(tree, mesh, plan: ParallelismPlan):
+    """Specs for per-device stacked trees (leading K axis over dev_axes)."""
+    inner = param_specs(jax.tree.map(lambda x: x[0], tree), mesh, plan)
+    return jax.tree.map(
+        lambda s: P(plan.dev_axes, *s), inner,
+        is_leaf=lambda s: isinstance(s, P))
+
+
+def state_specs(state, mesh, plan: ParallelismPlan, *, gen_fsdp: bool):
+    """Shardings for the protocol TrainState
+    {"gen","disc","gen_opt","disc_opt"(stacked)}."""
+    return {
+        "gen": param_specs(state["gen"], mesh, plan, fsdp=gen_fsdp),
+        "disc": param_specs(state["disc"], mesh, plan, fsdp=False),
+        "gen_opt": param_specs_opt(state["gen_opt"], state["gen"], mesh, plan,
+                                   fsdp=gen_fsdp),
+        "disc_opt": stacked_opt_specs(state["disc_opt"], state["disc"], mesh,
+                                      plan),
+    }
+
+
+def param_specs_opt(opt_state, params, mesh, plan, *, fsdp: bool):
+    """Optimizer moments share their parameter's sharding; scalars replicate."""
+    pspecs = param_specs(params, mesh, plan, fsdp=fsdp)
+
+    def match(node):
+        if isinstance(node, dict) and set(node) == set(("m", "v", "t")):
+            return {"m": pspecs, "v": pspecs, "t": P()}
+        if isinstance(node, dict) and set(node) == set(("mu",)):
+            return {"mu": pspecs}
+        return jax.tree.map(lambda _: P(), node)
+
+    return match(opt_state)
+
+
+def stacked_opt_specs(opt_state, params, mesh, plan):
+    inner = param_specs(params, mesh, plan, fsdp=False)
+    stacked = jax.tree.map(lambda s: P(plan.dev_axes, *s), inner,
+                           is_leaf=lambda s: isinstance(s, P))
+
+    def match(node):
+        if isinstance(node, dict) and set(node) == set(("m", "v", "t")):
+            return {"m": stacked, "v": stacked, "t": P(plan.dev_axes)}
+        if isinstance(node, dict) and set(node) == set(("mu",)):
+            return {"mu": stacked}
+        return jax.tree.map(lambda _: P(plan.dev_axes), node)
+
+    return match(opt_state)
+
+
+def data_spec(plan: ParallelismPlan):
+    """Token shards (K, n_k, seq): device axis over the paper's devices."""
+    return P(plan.dev_axes)
+
+
+def enc_feats_spec(cfg: ArchConfig, mesh, plan: ParallelismPlan):
+    """(n, t, d_model) stub frontend features."""
+    spec = [None, None, None]
+    if _divisible(cfg.d_model, mesh, plan.tp_axis):
+        spec[-1] = plan.tp_axis
+    return P(*spec)
+
+
+# ---------------------------------------------------------------------------
+# Serving (cache) shardings
+# ---------------------------------------------------------------------------
+
+def cache_specs(cfg: ArchConfig, caches, batch: int, mesh,
+                plan: ParallelismPlan):
+    """Specs for decode caches (leading group axis G on every leaf).
+
+    Strategy: shard batch over the device axes when divisible; otherwise
+    (long_500k, b=1) shard the KV length dim over (dev_axes + model) for
+    distributed flash-decode. kv-heads/head_dim stay unsharded unless
+    the batch path already consumed the device axes and kv divides model.
+    """
+    dev = plan.dev_axes
+    tp = plan.tp_axis
+    batch_shardable = _divisible(batch, mesh, dev)
+
+    def leaf_spec(path, leaf):
+        names = [getattr(p, "key", str(p)) for p in path]
+        name = names[-1]
+        shape = leaf.shape  # (G, b, ...)
+        spec = [None] * len(shape)
+        if batch_shardable and len(shape) >= 2 and shape[1] == batch:
+            spec[1] = dev
+        if name in ("k", "v", "pos", "valid") and len(shape) >= 3:
+            # length dim is index 2 for k/v (G,b,L,kv,hd) and (G,b,L) for pos
+            length = shape[2]
+            if not batch_shardable:
+                axes = dev + (tp,)
+                if _divisible(length, mesh, axes):
+                    spec[2] = axes
+                elif _divisible(length, mesh, dev):
+                    spec[2] = dev
+            elif name in ("k", "v") and _divisible(length, mesh, tp):
+                spec[2] = tp
+        if name == "ssm" and len(shape) == 5:
+            # (G, b, h, n, p): shard heads over model when divisible
+            if _divisible(shape[2], mesh, tp):
+                spec[2] = tp
+        if name == "conv" and len(shape) == 4:
+            if _divisible(shape[3], mesh, tp):
+                spec[3] = tp
+        return P(*spec)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(caches)
+    return jax.tree_util.tree_unflatten(
+        treedef, [leaf_spec(p, l) for p, l in flat])

@@ -1,0 +1,98 @@
+import numpy as np
+import pytest
+
+from repro.core.channel import ChannelConfig, ChannelSimulator, round_wallclock
+from repro.core.scheduling import SchedulerState, schedule_round
+
+
+def _sim(**kw):
+    return ChannelSimulator(ChannelConfig(n_devices=10, seed=3, **kw))
+
+
+class TestChannel:
+    def test_path_loss_monotone_in_distance(self):
+        sim = _sim()
+        order = np.argsort(sim.dist_km)
+        pl = sim.path_loss_db()
+        assert (np.diff(pl[order]) >= 0).all()
+
+    def test_rates_positive_and_fewer_devices_faster(self):
+        sim = _sim(fading=False)
+        r_all = sim.uplink_rates(10)
+        r_half = sim.uplink_rates(5)
+        assert (r_all > 0).all()
+        assert (r_half > r_all).all()   # more bandwidth each
+
+    def test_straggler_deadline(self):
+        sim = _sim(straggler_deadline_s=1e-9)
+        mask = np.ones(10, dtype=bool)
+        t = sim.round_timing(mask=mask, disc_params=10_000, gen_params=10_000,
+                             disc_step_flops=1e9, gen_step_flops=1e9,
+                             n_d=5, n_g=5)
+        assert t.stragglers.all()
+
+    def test_wallclock_serial_vs_parallel(self):
+        """One serial round takes at least as long as one parallel round
+        (device compute is not overlapped with the server's)."""
+        sim = _sim(fading=False)
+        mask = np.ones(10, dtype=bool)
+        t = sim.round_timing(mask=mask, disc_params=2_765_568,
+                             gen_params=3_576_704, disc_step_flops=1e10,
+                             gen_step_flops=1e10, n_d=5, n_g=5)
+        w_par = round_wallclock(t, mask, schedule="parallel")
+        w_ser = round_wallclock(t, mask, schedule="serial")
+        assert w_ser >= w_par > 0
+
+    def test_fedgan_round_longer_than_proposed(self):
+        """FedGAN: ~2x device compute and 2x upload bytes per round."""
+        sim = _sim(fading=False)
+        mask = np.ones(10, dtype=bool)
+        kw = dict(mask=mask, disc_params=2_765_568, gen_params=3_576_704,
+                  disc_step_flops=1e10, gen_step_flops=1e10, n_d=5, n_g=5)
+        t_prop = sim.round_timing(**kw)
+        t_fed = sim.round_timing(fedgan=True, **kw)
+        w_prop = round_wallclock(t_prop, mask, schedule="serial")
+        w_fed = round_wallclock(t_fed, mask, schedule="serial", fedgan=True)
+        assert w_fed > w_prop
+
+
+class TestScheduling:
+    def test_all(self):
+        st = SchedulerState("all", 10)
+        rng = np.random.default_rng(0)
+        assert schedule_round(st, np.ones(10), rng).all()
+
+    def test_round_robin_covers_everyone(self):
+        st = SchedulerState("round_robin", 10, ratio=0.3)
+        rng = np.random.default_rng(0)
+        seen = np.zeros(10, dtype=bool)
+        for _ in range(5):
+            seen |= schedule_round(st, np.ones(10), rng)
+        assert seen.all()
+
+    def test_best_channel_picks_top(self):
+        st = SchedulerState("best_channel", 10, ratio=0.2)
+        rng = np.random.default_rng(0)
+        rates = np.arange(10.0)
+        mask = schedule_round(st, rates, rng)
+        assert mask[8] and mask[9] and mask.sum() == 2
+
+    def test_ratio_counts(self):
+        for ratio, expect in [(1.0, 10), (0.5, 5), (0.2, 2), (0.05, 1)]:
+            st = SchedulerState("random", 10, ratio=ratio)
+            rng = np.random.default_rng(0)
+            assert schedule_round(st, np.ones(10), rng).sum() == expect
+
+    def test_prop_fair_rotates_under_equal_rates(self):
+        """With equal instantaneous rates, served devices' EWMA rises so
+        priority shifts to unserved ones."""
+        st = SchedulerState("prop_fair", 4, ratio=0.5)
+        rng = np.random.default_rng(0)
+        m1 = schedule_round(st, np.ones(4), rng)
+        m2 = schedule_round(st, np.ones(4), rng)
+        assert (m1 != m2).any()
+
+    def test_unknown_policy_raises(self):
+        st = SchedulerState("nope", 4)
+        with pytest.raises(ValueError):
+            schedule_round(st, np.ones(4), np.random.default_rng(0))

@@ -1,0 +1,98 @@
+"""Flash (blockwise) attention vs the naive reference — forward and
+gradients, across masks, dtypes, block sizes, and GQA folding."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.nn.attention as attn_mod
+from repro import nn
+from repro.nn.flash_ref import flash_attention_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def naive(q, k, v, q_pos, k_pos, scale, causal, window, k_valid=None):
+    s = jnp.einsum("...qd,...kd->...qk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    from repro.nn.flash_ref import _block_bias
+    s = s + _block_bias(q_pos, k_pos, causal, window, k_valid)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("...qk,...kd->...qd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 7),
+                                           (False, None)])
+@pytest.mark.parametrize("block_k", [16, 64, 1000])
+def test_flash_matches_naive(causal, window, block_k):
+    b, h, sq, sk, d = 2, 3, 24, 40, 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, h, sq, d))
+    k = jax.random.normal(ks[1], (b, h, sk, d))
+    v = jax.random.normal(ks[2], (b, h, sk, d))
+    q_pos = jnp.broadcast_to(jnp.arange(sk - sq, sk), (b, 1, sq))
+    k_pos = jnp.broadcast_to(jnp.arange(sk), (b, 1, sk))
+    out = flash_attention_ref(q, k, v, q_pos, k_pos, None, d ** -0.5,
+                              causal, window, block_k, False)
+    ref = naive(q, k, v, q_pos, k_pos, d ** -0.5, causal, window)
+    np.testing.assert_allclose(out, ref, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_grads_match(dtype):
+    b, h, s, d = 1, 2, 33, 8
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, h, s, d), dtype=dtype)
+    k = jax.random.normal(ks[1], (b, h, s, d), dtype=dtype)
+    v = jax.random.normal(ks[2], (b, h, s, d), dtype=dtype)
+    pos = jnp.broadcast_to(jnp.arange(s), (b, 1, s))
+
+    def f_flash(q, k, v):
+        return flash_attention_ref(q, k, v, pos, pos, None, d ** -0.5,
+                                   True, None, 16, False).astype(
+            jnp.float32).sum()
+
+    def f_naive(q, k, v):
+        return naive(q, k, v, pos, pos, d ** -0.5, True,
+                     None).astype(jnp.float32).sum()
+
+    g1 = jax.grad(f_flash, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_naive, argnums=(0, 1, 2))(q, k, v)
+    tol = 2e-5 if dtype == jnp.float32 else 0.05
+    for a, b_ in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b_, np.float32), atol=tol)
+
+
+def test_attention_layer_flash_vs_naive_path():
+    """attention_apply must agree with itself across the threshold."""
+    p = nn.attention_init(KEY, 64, 8, 2)
+    x = jax.random.normal(KEY, (2, 80, 64))
+    inv = nn.rope_frequencies(8)
+    old = attn_mod._FLASH_THRESHOLD
+    try:
+        attn_mod._FLASH_THRESHOLD = 1 << 62
+        y_naive = nn.attention_apply(p, x, n_heads=8, n_kv_heads=2,
+                                     inv_freq=inv, window=13)
+        attn_mod._FLASH_THRESHOLD = 1
+        y_flash = nn.attention_apply(p, x, n_heads=8, n_kv_heads=2,
+                                     inv_freq=inv, window=13)
+    finally:
+        attn_mod._FLASH_THRESHOLD = old
+    np.testing.assert_allclose(y_naive, y_flash, atol=3e-5)
+
+
+def test_flash_kvalid_padding():
+    """Invalid cache slots must not contribute."""
+    b, h, s, d = 1, 1, 4, 8
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, h, s, d))
+    k = jax.random.normal(ks[1], (b, h, s, d))
+    v = jax.random.normal(ks[2], (b, h, s, d))
+    pos = jnp.broadcast_to(jnp.arange(s), (b, 1, s))
+    valid = jnp.asarray([[[True, True, False, True]]])
+    out = flash_attention_ref(q, k, v, pos, pos, valid, d ** -0.5,
+                              False, None, 2, True)
+    ref = naive(q, k, v, pos, pos, d ** -0.5, False, None, valid)
+    np.testing.assert_allclose(out, ref, atol=1e-5)

@@ -1,0 +1,131 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import nn
+from repro.nn.attention import build_mask, NEG_INF
+
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestLinearNorms:
+    def test_linear_shapes_bias(self):
+        p = nn.linear_init(KEY, 8, 12)
+        y = nn.linear_apply(p, jnp.ones((3, 8)))
+        assert y.shape == (3, 12)
+
+    def test_rmsnorm_unit_scale(self):
+        p = nn.rmsnorm_init(16)
+        x = jax.random.normal(KEY, (4, 16)) * 10
+        y = nn.rmsnorm_apply(p, x)
+        rms = jnp.sqrt(jnp.mean(y ** 2, axis=-1))
+        np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+    def test_layernorm_zero_mean(self):
+        p = nn.layernorm_init(16)
+        x = jax.random.normal(KEY, (4, 16)) + 3.0
+        y = nn.layernorm_apply(p, x)
+        np.testing.assert_allclose(jnp.mean(y, -1), 0.0, atol=1e-4)
+
+    def test_batchnorm_stats(self):
+        p = nn.batchnorm_init(3)
+        x = jax.random.normal(KEY, (8, 4, 4, 3)) * 5 + 2
+        y = nn.batchnorm_apply(p, x)
+        np.testing.assert_allclose(y.mean((0, 1, 2)), 0.0, atol=1e-4)
+        np.testing.assert_allclose(y.std((0, 1, 2)), 1.0, atol=1e-2)
+
+    def test_norm_dtype_preserved(self):
+        p = nn.rmsnorm_init(8)
+        y = nn.rmsnorm_apply(p, jnp.ones((2, 8), dtype=jnp.bfloat16))
+        assert y.dtype == jnp.bfloat16
+
+
+class TestRoPE:
+    def test_rope_preserves_norm(self):
+        inv = nn.rope_frequencies(8)
+        x = jax.random.normal(KEY, (2, 5, 3, 8))
+        pos = jnp.broadcast_to(jnp.arange(5), (2, 5))
+        y = nn.apply_rope(x, pos, inv)
+        np.testing.assert_allclose(
+            jnp.linalg.norm(y, axis=-1), jnp.linalg.norm(x, axis=-1),
+            rtol=1e-5)
+
+    def test_rope_relative_shift(self):
+        """Rotating q and k by the same offset keeps their dot product."""
+        inv = nn.rope_frequencies(16)
+        q = jax.random.normal(KEY, (1, 1, 1, 16))
+        k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 16))
+        def dot_at(pq, pk):
+            qq = nn.apply_rope(q, jnp.full((1, 1), pq), inv)
+            kk = nn.apply_rope(k, jnp.full((1, 1), pk), inv)
+            return float(jnp.sum(qq * kk))
+        assert dot_at(3, 1) == pytest.approx(dot_at(13, 11), rel=1e-4)
+
+
+class TestMasks:
+    def test_causal(self):
+        pos = jnp.arange(4)[None]
+        m = build_mask(pos, pos, causal=True, window=None)
+        expect = np.triu(np.full((4, 4), NEG_INF), k=1)
+        np.testing.assert_allclose(m[0], expect)
+
+    def test_window(self):
+        pos = jnp.arange(6)[None]
+        m = build_mask(pos, pos, causal=True, window=2)
+        allowed = np.asarray(m[0] == 0)
+        for i in range(6):
+            for j in range(6):
+                assert allowed[i, j] == (j <= i and j > i - 2)
+
+    def test_k_valid(self):
+        qpos = jnp.arange(3)[None]
+        kpos = jnp.arange(3)[None]
+        valid = jnp.asarray([[True, False, True]])
+        m = build_mask(qpos, kpos, causal=False, window=None, k_valid=valid)
+        assert (np.asarray(m[0][:, 1]) == NEG_INF).all()
+
+
+class TestAttention:
+    def test_gqa_shapes(self):
+        p = nn.attention_init(KEY, 32, 8, 2)
+        y = nn.attention_apply(p, jnp.ones((2, 6, 32)), n_heads=8,
+                               n_kv_heads=2)
+        assert y.shape == (2, 6, 32)
+
+    def test_causality(self):
+        """Changing a future token must not change earlier outputs."""
+        p = nn.attention_init(KEY, 32, 4, 4)
+        x = jax.random.normal(KEY, (1, 8, 32))
+        y1 = nn.attention_apply(p, x, n_heads=4, n_kv_heads=4)
+        x2 = x.at[:, -1].add(10.0)
+        y2 = nn.attention_apply(p, x2, n_heads=4, n_kv_heads=4)
+        np.testing.assert_allclose(y1[:, :-1], y2[:, :-1], atol=1e-5)
+
+    def test_qk_norm_finite_large_inputs(self):
+        p = nn.attention_init(KEY, 32, 4, 2, qk_norm=True)
+        x = jax.random.normal(KEY, (1, 8, 32)) * 1e3
+        y = nn.attention_apply(p, x, n_heads=4, n_kv_heads=2, qk_norm=True)
+        assert jnp.isfinite(y).all()
+
+
+class TestMLPConv:
+    def test_swiglu(self):
+        p = nn.mlp_init(KEY, 16, 32)
+        assert nn.mlp_apply(p, jnp.ones((2, 16))).shape == (2, 16)
+        assert "w_gate" in p
+
+    def test_gelu_bias(self):
+        p = nn.mlp_init(KEY, 16, 32, gated=False, use_bias=True)
+        assert "w_gate" not in p and "b_in" in p
+        assert nn.mlp_apply(p, jnp.ones((2, 16))).shape == (2, 16)
+
+    def test_conv_updown(self):
+        pc = nn.conv2d_init(KEY, 3, 8, 4)
+        pt = nn.conv_transpose2d_init(KEY, 8, 3, 4)
+        img = jax.random.normal(KEY, (2, 16, 16, 3))
+        down = nn.conv2d_apply(pc, img)
+        assert down.shape == (2, 8, 8, 8)
+        up = nn.conv_transpose2d_apply(pt, down)
+        assert up.shape == (2, 16, 16, 3)

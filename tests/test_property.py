@@ -1,0 +1,123 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+import hypothesis.extra.numpy as hnp
+
+from repro.core.averaging import weighted_average, broadcast_like
+from repro.core.quantize import roundtrip
+from repro.nn.attention import build_mask
+from repro.nn.ssm import ssd_scan_ref
+from repro.data.partition import partition_iid
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(
+    k=st.integers(2, 6),
+    n=st.integers(1, 8),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_weighted_average_convexity(k, n, seed):
+    """Algorithm 2 output lies in the convex hull of the inputs and is
+    scale-invariant in the weights."""
+    rng = np.random.default_rng(seed)
+    stacked = {"p": jnp.asarray(rng.standard_normal((k, n)), jnp.float32)}
+    w = jnp.asarray(rng.uniform(0.1, 5.0, k), jnp.float32)
+    avg = weighted_average(stacked, w)["p"]
+    lo = stacked["p"].min(0) - 1e-5
+    hi = stacked["p"].max(0) + 1e-5
+    assert bool(((avg >= lo) & (avg <= hi)).all())
+    avg2 = weighted_average(stacked, 3.7 * w)["p"]
+    np.testing.assert_allclose(np.asarray(avg), np.asarray(avg2), atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(k=st.integers(1, 5), seed=st.integers(0, 2 ** 16))
+def test_average_of_identical_replicas_is_identity(k, seed):
+    rng = np.random.default_rng(seed)
+    p = {"w": jnp.asarray(rng.standard_normal((3, 2)), jnp.float32)}
+    stacked = broadcast_like(p, k)
+    w = jnp.asarray(rng.uniform(0.5, 2.0, k), jnp.float32)
+    avg = weighted_average(stacked, w)
+    np.testing.assert_allclose(np.asarray(avg["w"]), np.asarray(p["w"]),
+                               atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(bits=st.integers(6, 16), seed=st.integers(0, 2 ** 16))
+def test_quantize_error_bound(bits, seed):
+    rng = np.random.default_rng(seed)
+    x = {"w": jnp.asarray(rng.standard_normal(128), jnp.float32)}
+    out = roundtrip(jax.random.PRNGKey(seed), x, bits=bits)
+    levels = 2 ** (bits - 1) - 1
+    bound = float(jnp.abs(x["w"]).max()) / levels + 1e-7
+    assert float(jnp.abs(out["w"] - x["w"]).max()) <= bound
+
+
+@settings(**SETTINGS)
+@given(
+    s=st.integers(2, 24),
+    window=st.one_of(st.none(), st.integers(1, 30)),
+    causal=st.booleans(),
+)
+def test_mask_row_has_allowed_entry(s, window, causal):
+    """Every query with at least itself in range attends somewhere
+    (causal self-attention always allows the diagonal)."""
+    pos = jnp.arange(s)[None]
+    m = build_mask(pos, pos, causal=causal, window=window)
+    if causal:
+        diag = np.diagonal(np.asarray(m[0]))
+        np.testing.assert_array_equal(diag, 0.0)
+    else:
+        assert (np.asarray(m[0]) == 0).any(axis=1).all()
+
+
+@settings(**SETTINGS)
+@given(
+    s=st.integers(4, 32),
+    chunk=st.sampled_from([2, 4, 8, 16]),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_ssd_chunk_size_invariance(s, chunk, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    b, h, p, n = 1, 2, 4, 3
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, s, 1, n))
+    C = jax.random.normal(ks[4], (b, s, 1, n))
+    y1 = ssd_scan_ref(x, dt, A, B, C, chunk=chunk)
+    y2 = ssd_scan_ref(x, dt, A, B, C, chunk=max(s, 1))
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(10, 60),
+    k=st.integers(1, 10),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_partition_rows_are_a_subset_without_duplicates(n, k, seed):
+    data = np.arange(n)[:, None].astype(np.float32)
+    shards = partition_iid(data, k, seed=seed)
+    flat = shards.reshape(-1)
+    assert len(set(flat.tolist())) == flat.size        # no duplicates
+    assert set(flat.tolist()) <= set(range(n))         # subset of source
+    assert shards.shape[0] == k
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2 ** 16), k=st.integers(2, 5))
+def test_round_weight_zero_is_noop_weight(seed, k):
+    """Adding a zero-weight replica never changes Algorithm 2's output."""
+    rng = np.random.default_rng(seed)
+    base = jnp.asarray(rng.standard_normal((k, 4)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.5, 2.0, k), jnp.float32)
+    avg1 = weighted_average({"p": base}, w)["p"]
+    extra = jnp.concatenate([base, 100.0 * jnp.ones((1, 4))])
+    w2 = jnp.concatenate([w, jnp.zeros(1)])
+    avg2 = weighted_average({"p": extra}, w2)["p"]
+    np.testing.assert_allclose(np.asarray(avg1), np.asarray(avg2), atol=1e-5)

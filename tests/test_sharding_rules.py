@@ -1,0 +1,92 @@
+"""Sharding rules: divisibility, role assignment, cache specs.
+
+These run against abstract shapes + a 1x1 host mesh (no XLA_FLAGS)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_arch_config
+from repro.configs.base import MeshConfig
+from repro.launch.mesh import make_host_mesh
+from repro.models import gan
+from repro.models.backbone import init_decode_caches
+from repro.sharding import rules
+
+KEY = jax.random.PRNGKey(0)
+
+
+class FakeMesh:
+    """Just enough mesh for the rules (shape lookups)."""
+    def __init__(self, data=16, model=16, pod=None):
+        self.shape = {"data": data, "model": model}
+        if pod:
+            self.shape["pod"] = pod
+
+
+def test_plan_fsdp_threshold():
+    small = get_arch_config("granite-3-2b")
+    big = get_arch_config("mixtral-8x22b")
+    assert rules.plan_for(small, MeshConfig()).fsdp_axes is None
+    assert rules.plan_for(big, MeshConfig()).fsdp_axes == ("data",)
+    assert rules.plan_for(big, MeshConfig(multi_pod=True)).fsdp_axes == \
+        ("pod", "data")
+
+
+def test_param_specs_roles():
+    cfg = get_arch_config("qwen3-1.7b").reduced()
+    params = jax.eval_shape(lambda: gan.generator_init(KEY, cfg))
+    mesh = FakeMesh(data=2, model=4)
+    plan = rules.ParallelismPlan(fsdp_axes=("data",), dev_axes=("data",))
+    specs = rules.param_specs(params, mesh, plan, fsdp=True)
+    # embedding: d over model (vocab 512 % 4 == 0 but rule shards d)
+    assert specs["embed"]["table"] == P(None, "model")
+    # in-projection: (d, out) -> (fsdp, tp); leading group axis unsharded
+    wq = specs["backbone"]["groups"]["sub0"]["attn"]["wq"]
+    assert wq == P(None, "data", "model")
+    # out-projection: (in, d) -> (tp, fsdp)
+    wo = specs["backbone"]["groups"]["sub0"]["attn"]["wo"]
+    assert wo == P(None, "model", "data")
+    # norms replicated
+    assert specs["backbone"]["final_norm"]["scale"] == P()
+
+
+def test_param_specs_skip_indivisible():
+    cfg = get_arch_config("granite-3-2b")   # vocab 49155 is odd
+    params = jax.eval_shape(
+        lambda: {"embed": {"table": jnp.zeros((cfg.vocab, 8))}})
+    mesh = FakeMesh(data=16, model=16)
+    plan = rules.ParallelismPlan(dev_axes=("data",))
+    specs = rules.param_specs(params, mesh, plan)
+    # d=8 not divisible by 16 either -> fully replicated, never crashes
+    assert specs["embed"]["table"] == P(None, None)
+
+
+def test_cache_specs_batch_vs_seq():
+    cfg = get_arch_config("granite-3-2b").reduced()
+    caches = jax.eval_shape(lambda: init_decode_caches(cfg, 32, 64))
+    mesh = FakeMesh(data=16, model=16)
+    plan = rules.ParallelismPlan(dev_axes=("data",))
+    # batch 32 divisible by 16 -> batch-sharded
+    specs = rules.cache_specs(cfg, caches, 32, mesh, plan)
+    k_spec = specs["sub0"]["k"]
+    assert k_spec[1] == "data"
+    # batch 1 -> sequence-sharded over (data, model)
+    caches1 = jax.eval_shape(lambda: init_decode_caches(cfg, 1, 512))
+    specs1 = rules.cache_specs(cfg, caches1, 1, mesh, plan)
+    assert specs1["sub0"]["k"][2] == ("data", "model")
+
+
+def test_state_specs_cover_train_state():
+    from repro.configs.base import ProtocolConfig
+    from repro.core import protocol
+    cfg = get_arch_config("mamba2-130m").reduced()
+    pcfg = ProtocolConfig(n_devices=4)
+    state = jax.eval_shape(lambda: protocol.make_train_state(
+        KEY, lambda k: gan.gan_init(k, cfg), pcfg, 4))
+    mesh = FakeMesh(data=4, model=2)
+    plan = rules.ParallelismPlan(dev_axes=("data",))
+    specs = rules.state_specs(state, mesh, plan, gen_fsdp=False)
+    # structure must match exactly (same treedef)
+    jax.tree.map(lambda a, b: None, state, specs,
+                 is_leaf=lambda x: isinstance(x, (P, jax.ShapeDtypeStruct)))

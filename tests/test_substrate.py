@@ -1,0 +1,139 @@
+"""Data pipeline, FID metric, checkpointing, optimizers."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import save_checkpoint, load_checkpoint, latest_step
+from repro.data import make_image_dataset, make_token_dataset, partition
+from repro.metrics import fid_score, make_feature_extractor
+from repro.metrics.fid import frechet_distance, make_token_feature_extractor
+from repro.optim import make_optimizer, apply_updates
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestData:
+    def test_image_dataset_ranges(self):
+        imgs, labels = make_image_dataset("toy", 64)
+        assert imgs.shape == (64, 32, 32, 1)
+        assert imgs.min() >= -1 and imgs.max() <= 1
+        assert labels.shape == (64,)
+
+    def test_partition_iid_shapes(self):
+        imgs, _ = make_image_dataset("toy", 103)
+        shards = partition(imgs, 10)
+        assert shards.shape == (10, 10, 32, 32, 1)
+
+    def test_partition_preserves_rows(self):
+        data = np.arange(40).reshape(20, 2).astype(np.float32)
+        shards = partition(data, 4)
+        flat = sorted(map(tuple, shards.reshape(-1, 2).tolist()))
+        assert flat == sorted(map(tuple, data.tolist()))
+
+    def test_dirichlet_skew(self):
+        data = np.arange(400).reshape(200, 2).astype(np.float32)
+        labels = np.repeat(np.arange(4), 50)
+        shards = partition(data, 4, labels=labels, kind="dirichlet",
+                           alpha=0.1, seed=0)
+        assert shards.shape[0] == 4 and shards.shape[1] > 0
+
+    def test_token_dataset(self):
+        toks, labels = make_token_dataset(8, 32, 100, n_modes=3)
+        assert toks.shape == (8, 32)
+        assert toks.min() >= 0 and toks.max() < 100
+
+
+class TestFID:
+    def test_identical_distributions_near_zero(self):
+        f = jax.random.normal(KEY, (512, 16))
+        assert fid_score(f, f) < 1e-6
+
+    def test_mean_shift_increases(self):
+        f = np.asarray(jax.random.normal(KEY, (512, 16)))
+        d1 = fid_score(f, f + 0.5)
+        d2 = fid_score(f, f + 2.0)
+        assert 0 < d1 < d2
+
+    def test_gaussian_closed_form(self):
+        """1-D Gaussians: FID = (mu1-mu2)^2 + (s1-s2)^2."""
+        d = frechet_distance(np.asarray([1.0]), np.asarray([[4.0]]),
+                             np.asarray([3.0]), np.asarray([[9.0]]))
+        assert d == pytest.approx((1 - 3) ** 2 + (2 - 3) ** 2, rel=1e-6)
+
+    def test_feature_extractor_discriminates(self):
+        feat = make_feature_extractor(1)
+        a, _ = make_image_dataset("toy", 128, seed=0)
+        b, _ = make_image_dataset("toy", 128, seed=0)
+        noise = np.random.default_rng(0).uniform(-1, 1, a.shape).astype(
+            np.float32)
+        same = fid_score(feat(jnp.asarray(a)), feat(jnp.asarray(b)))
+        diff = fid_score(feat(jnp.asarray(a)), feat(jnp.asarray(noise)))
+        assert diff > 10 * max(same, 1e-9)
+
+    def test_token_features(self):
+        feat = make_token_feature_extractor(50)
+        toks, _ = make_token_dataset(16, 24, 50)
+        out = feat(jnp.asarray(toks))
+        assert out.shape[0] == 16 and jnp.isfinite(out).all()
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        tree = {
+            "gen": {"w": jnp.arange(6.0).reshape(2, 3),
+                    "layers": [{"a": jnp.ones(2)}, {"a": jnp.zeros(2)}]},
+            "count": jnp.int32(7),
+            "maybe": None,
+        }
+        path = save_checkpoint(str(tmp_path), 3, tree,
+                               metadata={"round": 3})
+        assert os.path.exists(path)
+        loaded, step, meta = load_checkpoint(str(tmp_path))
+        assert step == 3 and meta["round"] == 3
+        np.testing.assert_array_equal(loaded["gen"]["w"],
+                                      np.arange(6.0).reshape(2, 3))
+        assert isinstance(loaded["gen"]["layers"], list)
+        np.testing.assert_array_equal(loaded["gen"]["layers"][0]["a"],
+                                      np.ones(2))
+        assert loaded["maybe"] is None
+        assert int(loaded["count"]) == 7
+
+    def test_latest_step(self, tmp_path):
+        assert latest_step(str(tmp_path)) is None
+        save_checkpoint(str(tmp_path), 1, {"x": jnp.ones(1)})
+        save_checkpoint(str(tmp_path), 5, {"x": jnp.ones(1)})
+        assert latest_step(str(tmp_path)) == 5
+
+
+class TestOptim:
+    def test_sgd_descends_quadratic(self):
+        opt = make_optimizer("sgd", 0.1)
+        x = {"v": jnp.asarray(4.0)}
+        st = opt.init(x)
+        for _ in range(50):
+            g = jax.tree.map(lambda v: 2 * v, x)
+            up, st = opt.update(g, st, x)
+            x = apply_updates(x, up)
+        assert abs(float(x["v"])) < 1e-3
+
+    @pytest.mark.parametrize("name", ["momentum", "adam"])
+    def test_stateful_optimizers_converge(self, name):
+        opt = make_optimizer(name, 0.05)
+        x = {"v": jnp.asarray(4.0)}
+        st = opt.init(x)
+        for _ in range(300):
+            g = jax.tree.map(lambda v: 2 * v, x)
+            up, st = opt.update(g, st, x)
+            x = apply_updates(x, up)
+        assert abs(float(x["v"])) < 1e-2
+
+    def test_adam_bias_correction_first_step(self):
+        """First Adam step ~= lr * sign(grad) regardless of magnitude."""
+        opt = make_optimizer("adam", 0.01)
+        x = {"v": jnp.asarray(1.0)}
+        st = opt.init(x)
+        up, _ = opt.update({"v": jnp.asarray(1e-4)}, st, x)
+        assert float(up["v"]) == pytest.approx(-0.01, rel=1e-3)
