@@ -31,6 +31,9 @@ from repro.models.specs import make_dcgan_spec
 FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
 ROUNDS = int(os.environ.get("REPRO_BENCH_ROUNDS", "60" if FULL else "12"))
 EVAL_EVERY = int(os.environ.get("REPRO_BENCH_EVAL_EVERY", "4"))
+# "fused" = compiled multi-round driver (chunks of eval_every rounds per
+# dispatch); "host" = the per-round oracle loop.
+DRIVER = os.environ.get("REPRO_BENCH_DRIVER", "fused")
 
 
 def dataset_for(name: str):
@@ -83,7 +86,7 @@ class Curve:
 def run_experiment(label: str, *, dataset="celeba", algorithm="proposed",
                    schedule="serial", k=10, scheduler="all", ratio=1.0,
                    rounds=None, seed=0, channel_kw=None,
-                   gen_loss="nonsaturating") -> Curve:
+                   gen_loss="nonsaturating", driver=None) -> Curve:
     ds = dataset_for(dataset)
     cfg = dcgan_for(ds)
     spec = make_dcgan_spec(cfg, gen_loss_variant=gen_loss)
@@ -112,7 +115,8 @@ def run_experiment(label: str, *, dataset="celeba", algorithm="proposed",
                       shards, jax.random.PRNGKey(seed),
                       algorithm=algorithm, channel_cfg=chan,
                       disc_step_flops=step_flops,
-                      gen_step_flops=step_flops)
+                      gen_step_flops=step_flops,
+                      driver=driver or DRIVER)
     hist = trainer.run(rounds or ROUNDS, eval_every=EVAL_EVERY,
                        fid_fn=fid_fn)
     return Curve(

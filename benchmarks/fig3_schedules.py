@@ -10,14 +10,15 @@ import time
 from benchmarks.common import run_experiment, last_fid, emit_csv_row
 
 
-def main(out_dir="results/bench"):
+def main(out_dir="results/bench", driver=None):
+    # driver=None falls through to run_experiment's REPRO_BENCH_DRIVER default
     os.makedirs(out_dir, exist_ok=True)
     curves = []
     for dataset in ("celeba", "cifar10", "rsna"):
         for schedule in ("serial", "parallel"):
             t0 = time.time()
             c = run_experiment(f"{dataset}/{schedule}", dataset=dataset,
-                               schedule=schedule)
+                               schedule=schedule, driver=driver)
             dt = (time.time() - t0) * 1e6 / max(len(c.rounds), 1)
             curves.append(c)
             emit_csv_row(f"fig3_{dataset}_{schedule}", dt,

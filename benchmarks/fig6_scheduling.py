@@ -14,14 +14,15 @@ from benchmarks.common import run_experiment, last_fid, emit_csv_row
 CHANNEL = dict(fading=True, straggler_deadline_s=60.0)
 
 
-def main(out_dir="results/bench"):
+def main(out_dir="results/bench", driver=None):
+    # driver=None falls through to run_experiment's REPRO_BENCH_DRIVER default
     os.makedirs(out_dir, exist_ok=True)
     curves = []
     for ratio in (1.0, 0.5, 0.2):
         t0 = time.time()
         c = run_experiment(f"fig6/ratio={ratio}", dataset="celeba",
                            scheduler="best_channel", ratio=ratio,
-                           channel_kw=CHANNEL)
+                           channel_kw=CHANNEL, driver=driver)
         dt = (time.time() - t0) * 1e6 / max(len(c.rounds), 1)
         curves.append(c)
         emit_csv_row(f"fig6_ratio{int(ratio * 100)}", dt,

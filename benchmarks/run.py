@@ -18,6 +18,9 @@ def main() -> None:
     from benchmarks import kernels_bench
     kernels_bench.main()
 
+    from benchmarks import driver_bench
+    driver_bench.main()
+
     from benchmarks import fig3_schedules, fig4_devices, fig5_fedgan, \
         fig6_scheduling
     fig3_schedules.main()

@@ -38,6 +38,9 @@ def main():
     ap.add_argument("--seq-len", type=int, default=32)
     ap.add_argument("--schedule", choices=["serial", "parallel"],
                     default="serial")
+    ap.add_argument("--driver", choices=["fused", "host"], default="fused",
+                    help="fused = R rounds per XLA dispatch (lax.scan); "
+                         "host = one dispatch per round (oracle path)")
     ap.add_argument("--full-scale", action="store_true",
                     help="build the full assigned config (cluster only)")
     ap.add_argument("--ckpt-dir", default="")
@@ -47,7 +50,8 @@ def main():
     if not args.full_scale:
         cfg = cfg.reduced()
     print(f"[train_distgan] {cfg.name} ({cfg.family}), "
-          f"{args.devices} devices, schedule={args.schedule}")
+          f"{args.devices} devices, schedule={args.schedule}, "
+          f"driver={args.driver}")
 
     pcfg = ProtocolConfig(n_devices=args.devices, n_d=2, n_g=2,
                           sample_size=4, server_sample_size=4,
@@ -72,7 +76,7 @@ def main():
 
     trainer = Trainer(spec, pcfg,
                       lambda k: gan.gan_init(k, cfg), shards,
-                      jax.random.PRNGKey(0))
+                      jax.random.PRNGKey(0), driver=args.driver)
     t0 = time.time()
     trainer.run(args.rounds, eval_every=max(args.rounds // 4, 1),
                 fid_fn=fid_fn, verbose=True)

@@ -4,6 +4,7 @@ update schedules, device scheduling, wireless channel accounting)."""
 from repro.core.protocol import (
     GanModelSpec,
     gan_round,
+    gan_rounds_scan,
     device_update,
     server_update,
     centralized_step,
@@ -22,4 +23,6 @@ from repro.core.channel import (
     ChannelSimulator,
     round_wallclock,
 )
+from repro.core.jax_channel import JaxChannel
+from repro.core.jax_scheduling import JaxScheduler, schedule_step
 from repro.core.engine import Trainer

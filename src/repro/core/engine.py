@@ -1,6 +1,24 @@
-"""Host-side training engine: drives communication rounds with device
-scheduling, the wireless channel simulator, wall-clock accounting, and
-periodic evaluation. This is the paper's experimental harness (Figs 3-6).
+"""Training engine: drives communication rounds with device scheduling,
+the wireless channel simulator, wall-clock accounting, and periodic
+evaluation. This is the paper's experimental harness (Figs 3-6).
+
+Two drivers:
+
+  driver="fused" (default for the proposed protocol) — chunks of R
+      rounds run through `protocol.gan_rounds_scan`: scheduling, channel
+      timing, the model math, and wall-clock accounting are one XLA
+      dispatch per chunk (donated state, no per-round host round-trip).
+      Chunk boundaries fall on `eval_every` so FID evaluation interleaves
+      exactly as in the host loop.
+  driver="host" — the original per-round host loop over numpy
+      scheduling/channel state. Retained as the EQUIVALENCE ORACLE: with
+      a deterministic scheduler (or fading=False) the fused driver must
+      reproduce its masks bitwise and params/metrics to float32
+      round-off, which tests/test_driver_equivalence.py enforces.
+
+FedGAN and centralized baselines always use the host loop (their round
+costs are per-round host decisions and they don't need thousands of
+cheap rounds).
 """
 from __future__ import annotations
 
@@ -15,6 +33,8 @@ import numpy as np
 from repro.configs.base import ProtocolConfig
 from repro.core import protocol, fedgan
 from repro.core.channel import ChannelConfig, ChannelSimulator, round_wallclock
+from repro.core.jax_channel import JaxChannel
+from repro.core.jax_scheduling import JaxScheduler
 from repro.core.scheduling import SchedulerState, schedule_round
 
 
@@ -25,31 +45,38 @@ class RoundRecord:
     cumulative_s: float
     metrics: dict
     fid: Optional[float] = None
+    mask: Optional[np.ndarray] = None   # (K,) bool — scheduled devices
 
 
 class Trainer:
     """Runs the proposed protocol, FedGAN, or centralized training over a
-    simulated device fleet. All model math is jitted; scheduling and
-    channel timing are host-side numpy."""
+    simulated device fleet. All model math is jitted; the fused driver
+    additionally folds scheduling + channel timing into the same
+    dispatch, while the host driver keeps them in numpy."""
 
     def __init__(self, spec: protocol.GanModelSpec, pcfg: ProtocolConfig,
                  init_fn: Callable, data_stacked, key, *,
                  algorithm: str = "proposed",
                  channel_cfg: Optional[ChannelConfig] = None,
-                 disc_step_flops: float = 1e9, gen_step_flops: float = 1e9):
+                 disc_step_flops: float = 1e9, gen_step_flops: float = 1e9,
+                 driver: str = "fused"):
         self.spec, self.pcfg = spec, pcfg
         self.algorithm = algorithm
         self.key = key
         self.data = data_stacked
         self.n_devices = pcfg.n_devices
-        self.channel = ChannelSimulator(channel_cfg or ChannelConfig(
-            n_devices=pcfg.n_devices))
+        channel_cfg = channel_cfg or ChannelConfig(n_devices=pcfg.n_devices)
+        self.channel = ChannelSimulator(channel_cfg)
         self.sched = SchedulerState(
             policy=pcfg.scheduler, n_devices=pcfg.n_devices,
             ratio=pcfg.scheduling_ratio)
         self.rng = np.random.default_rng(0)
         self.disc_step_flops = disc_step_flops
         self.gen_step_flops = gen_step_flops
+        if driver not in ("fused", "host"):
+            raise ValueError(f"unknown driver {driver!r}")
+        # only the proposed protocol has a fused scan path
+        self.driver = driver if algorithm == "proposed" else "host"
 
         if algorithm == "fedgan":
             self.state = fedgan.make_fedgan_state(key, init_fn, pcfg,
@@ -69,18 +96,103 @@ class Trainer:
             self._round = jax.jit(
                 lambda s, d, w, k: protocol.gan_round(spec, pcfg, s, d, w, k))
 
-        self._disc_nparams = sum(
-            int(x.size) for x in jax.tree_util.tree_leaves(self.state["disc"]))
-        self._gen_nparams = sum(
-            int(x.size) for x in jax.tree_util.tree_leaves(self.state["gen"]))
+        if self.driver == "fused":
+            self.jax_channel = JaxChannel(channel_cfg)
+            self.jax_sched = JaxScheduler(
+                policy=pcfg.scheduler, n_devices=pcfg.n_devices,
+                ratio=pcfg.scheduling_ratio)
+            self._sched_carry = self.jax_sched.init_carry()
+            self._chunk_fns: dict[int, Callable] = {}
+
+        self._disc_nparams = protocol.count_params(self.state["disc"])
+        self._gen_nparams = protocol.count_params(self.state["gen"])
         self.history: list[RoundRecord] = []
         self._clock = 0.0
+        self._round_index = 0
 
     # ------------------------------------------------------------------
     def run(self, n_rounds: int, *, eval_every: int = 0,
             fid_fn: Optional[Callable] = None, verbose: bool = False):
-        for t in range(n_rounds):
-            round_key = jax.random.fold_in(self.key, t)
+        if self.driver == "fused":
+            return self._run_fused(n_rounds, eval_every=eval_every,
+                                   fid_fn=fid_fn, verbose=verbose)
+        return self._run_host(n_rounds, eval_every=eval_every,
+                              fid_fn=fid_fn, verbose=verbose)
+
+    # ------------------------------------------------------------------
+    # fused driver — R rounds per dispatch
+    # ------------------------------------------------------------------
+    def _chunk_fn(self, n: int):
+        """Jitted `gan_rounds_scan` over a fixed chunk length n; the
+        start round is traced so one compile serves every chunk of this
+        length. State and scheduler carry are donated."""
+        fn = self._chunk_fns.get(n)
+        if fn is None:
+            spec, pcfg = self.spec, self.pcfg
+
+            def run_chunk(state, sched_carry, data, key, start_round):
+                return protocol.gan_rounds_scan(
+                    spec, pcfg, state, data, key, n,
+                    channel=self.jax_channel, scheduler=self.jax_sched,
+                    sched_carry=sched_carry, start_round=start_round,
+                    disc_step_flops=self.disc_step_flops,
+                    gen_step_flops=self.gen_step_flops)
+
+            fn = jax.jit(run_chunk, donate_argnums=(0, 1))
+            self._chunk_fns[n] = fn
+        return fn
+
+    def _eval_boundaries(self, n_rounds: int, eval_every: int,
+                        have_fid: bool):
+        """Chunk lengths whose boundaries land on the FID-eval rounds."""
+        if not (have_fid and eval_every):
+            return [n_rounds] if n_rounds else []
+        chunks, done = [], 0
+        start = self._round_index
+        while done < n_rounds:
+            # next multiple of eval_every past the current absolute round
+            nxt = ((start + done) // eval_every + 1) * eval_every
+            chunks.append(min(nxt - (start + done), n_rounds - done))
+            done += chunks[-1]
+        return chunks
+
+    def _run_fused(self, n_rounds: int, *, eval_every: int,
+                   fid_fn: Optional[Callable], verbose: bool):
+        for chunk in self._eval_boundaries(n_rounds, eval_every,
+                                           fid_fn is not None):
+            start = self._round_index
+            self.state, self._sched_carry, out = self._chunk_fn(chunk)(
+                self.state, self._sched_carry, self.data, self.key,
+                jnp.int32(start))
+            metrics = {k: np.asarray(v) for k, v in out["metrics"].items()}
+            walls = np.asarray(out["wallclock_s"])
+            masks = np.asarray(out["mask"])
+            for i in range(chunk):
+                t = start + i
+                self._clock += float(walls[i])
+                fid = None
+                if (fid_fn is not None and eval_every
+                        and (t + 1) % eval_every == 0):
+                    fid = float(fid_fn(self.state["gen"],
+                                       jax.random.fold_in(self.key,
+                                                          10_000 + t)))
+                rec = RoundRecord(
+                    t, float(walls[i]), self._clock,
+                    {k: float(v[i]) for k, v in metrics.items()}, fid,
+                    mask=masks[i])
+                self.history.append(rec)
+                if verbose:
+                    self._print_record(rec)
+            self._round_index += chunk
+        return self.history
+
+    # ------------------------------------------------------------------
+    # host driver — one round per dispatch (the oracle)
+    # ------------------------------------------------------------------
+    def _run_host(self, n_rounds: int, *, eval_every: int,
+                  fid_fn: Optional[Callable], verbose: bool):
+        for _ in range(n_rounds):
+            t = self._round_index
 
             # Step 1: schedule + channel state
             rates = self.channel.uplink_rates(self.sched.n_scheduled)
@@ -98,6 +210,7 @@ class Trainer:
                 dtype=jnp.float32)
 
             # Steps 2-5 (jitted)
+            round_key = jax.random.fold_in(self.key, t)
             data = self._pooled if self.algorithm == "centralized" else self.data
             self.state, metrics = self._round(self.state, data, weights,
                                               round_key)
@@ -111,12 +224,19 @@ class Trainer:
                 fid = float(fid_fn(self.state["gen"],
                                    jax.random.fold_in(self.key, 10_000 + t)))
             rec = RoundRecord(t, wall, self._clock,
-                              {k: float(v) for k, v in metrics.items()}, fid)
+                              {k: float(v) for k, v in metrics.items()}, fid,
+                              mask=mask.copy())
             self.history.append(rec)
+            self._round_index += 1
             if verbose:
-                msg = (f"round {t:4d}  t={self._clock:9.2f}s  "
-                       f"D={rec.metrics.get('disc_objective', float('nan')):+.4f}")
-                if fid is not None:
-                    msg += f"  FID={fid:8.2f}"
-                print(msg)
+                self._print_record(rec)
         return self.history
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _print_record(rec: RoundRecord):
+        msg = (f"round {rec.round:4d}  t={rec.cumulative_s:9.2f}s  "
+               f"D={rec.metrics.get('disc_objective', float('nan')):+.4f}")
+        if rec.fid is not None:
+            msg += f"  FID={rec.fid:8.2f}"
+        print(msg)

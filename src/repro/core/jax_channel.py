@@ -1,0 +1,110 @@
+"""Pure-JAX twin of `core.channel` (paper Section IV wireless system).
+
+Device placement is drawn host-side with the SAME numpy seed as
+`ChannelSimulator`, so a `JaxChannel(cfg)` sees the exact distances (and
+hence path losses and the deterministic downlink rate) of its numpy
+twin. Per-round Rayleigh fading uses `jax.random.exponential` — the same
+Exp(1) marginal as the numpy stream but different draws, so fading
+quantities agree in distribution, not bitwise. With `fading=False` every
+output matches the numpy simulator to float32 round-off, which is the
+oracle contract tests/test_driver_equivalence.py pins down.
+
+All methods are pure and jittable; the fused driver calls them inside
+`lax.scan` with per-round keys.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.channel import ChannelConfig, ChannelSimulator
+
+
+class JaxRoundTiming(NamedTuple):
+    compute_dev_s: jnp.ndarray     # (K,) local discriminator compute
+    upload_s: jnp.ndarray          # (K,) local model upload
+    compute_srv_s: jnp.ndarray     # scalar — generator update
+    broadcast_s: jnp.ndarray       # scalar — global model broadcast
+    stragglers: jnp.ndarray        # (K,) bool — missed the deadline
+
+
+class JaxChannel:
+    """Jittable channel simulator over a fixed device placement."""
+
+    def __init__(self, cfg: ChannelConfig):
+        self.cfg = cfg
+        # Delegate placement, path loss, and the fading-free downlink
+        # rate to the numpy twin (all host-side f64), so the two
+        # simulators share one definition of the cell layout.
+        sim = ChannelSimulator(cfg)
+        self.dist_km = jnp.asarray(sim.dist_km, jnp.float32)
+        self.gain = jnp.asarray(10.0 ** (-sim.path_loss_db() / 10.0),
+                                jnp.float32)
+        self.downlink_rate_s = sim.downlink_rate()
+
+    def path_loss_db(self):
+        return 128.1 + 37.6 * jnp.log10(self.dist_km)
+
+    def uplink_rates(self, key, n_scheduled):
+        """(K,) bits/s under an equal OFDMA split of the band.
+        n_scheduled may be a static int or a traced scalar (mask.sum())."""
+        cfg = self.cfg
+        bw = cfg.bandwidth_hz / jnp.maximum(
+            jnp.asarray(n_scheduled, jnp.float32), 1.0)
+        noise_w = 10 ** ((cfg.noise_psd_dbm_hz - 30) / 10) * bw
+        tx_w = 10 ** ((cfg.device_tx_dbm - 30) / 10)
+        gain = self.gain
+        if cfg.fading:
+            gain = gain * jax.random.exponential(key, (cfg.n_devices,))
+        snr = tx_w * gain / noise_w
+        return bw * jnp.log2(1.0 + snr)
+
+    # ------------------------------------------------------------------
+    def round_timing(self, key, mask, *, disc_params: int, gen_params: int,
+                     disc_step_flops: float, gen_step_flops: float,
+                     n_d: int, n_g: int,
+                     fedgan: bool = False) -> JaxRoundTiming:
+        """Wall-clock pieces of one communication round (fresh fading
+        draw, mirroring the numpy twin's second `uplink_rates` call)."""
+        cfg = self.cfg
+        rates = self.uplink_rates(key, jnp.sum(mask))
+        up_bits = cfg.bits_per_param * (
+            disc_params + gen_params if fedgan else disc_params)
+        upload = jnp.where(mask, up_bits / jnp.maximum(rates, 1.0), 0.0)
+        dev_flops = n_d * disc_step_flops + (
+            n_g * gen_step_flops if fedgan else 0.0)
+        compute_dev = jnp.where(mask, dev_flops / cfg.device_flops, 0.0)
+        compute_srv = jnp.float32(
+            0.0 if fedgan else n_g * gen_step_flops / cfg.server_flops)
+        down_bits = cfg.bits_per_param * (disc_params + gen_params)
+        broadcast = jnp.float32(down_bits / self.downlink_rate_s)
+        stragglers = mask & (upload + compute_dev > cfg.straggler_deadline_s)
+        return JaxRoundTiming(compute_dev, upload, compute_srv, broadcast,
+                              stragglers)
+
+
+def round_wallclock(t: JaxRoundTiming, mask, *, schedule: str,
+                    fedgan: bool = False):
+    """Fig. 1 / Fig. 2 wall-clock composition, jittable twin of
+    `channel.round_wallclock`. Returns a float32 scalar."""
+    active = mask & ~t.stragglers
+    any_active = active.any()
+
+    def masked_max(x):
+        return jnp.max(jnp.where(active, x, -jnp.inf))
+
+    if fedgan:
+        wall = masked_max(t.compute_dev_s + t.upload_s) + t.broadcast_s
+    elif schedule == "parallel":
+        wall = (jnp.maximum(masked_max(t.compute_dev_s), t.compute_srv_s)
+                + masked_max(t.upload_s) + t.broadcast_s)
+    elif schedule == "serial":
+        wall = (masked_max(t.compute_dev_s + t.upload_s)
+                + jnp.maximum(t.compute_srv_s, t.broadcast_s * 0.5)
+                + t.broadcast_s * 0.5)
+    else:
+        raise ValueError(schedule)
+    return jnp.where(any_active, wall, t.broadcast_s).astype(jnp.float32)

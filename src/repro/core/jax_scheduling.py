@@ -1,0 +1,86 @@
+"""Pure-JAX twin of `core.scheduling` (paper Step 1 / Fig. 6).
+
+Same five policies, expressed as a jittable step whose mutable pieces —
+the round-robin cursor and the proportional-fair EWMA rates — travel in
+an explicit scan carry instead of a host-side dataclass, so the fused
+multi-round driver (`protocol.gan_rounds_scan`) can run thousands of
+scheduling decisions inside one `lax.scan` without a host round-trip.
+
+Equivalence contract with the numpy twin (tested in
+tests/test_driver_equivalence.py):
+
+  * `all`, `round_robin`, `best_channel`, `prop_fair` select the SAME
+    device sets as `scheduling.schedule_round` under identical rates
+    (ties broken by ascending argsort position, which both argsorts
+    agree on for distinct values), including cursor wrap-around and the
+    EWMA evolution.
+  * `random` matches in distribution only — `jax.random` and
+    `numpy.random.Generator` are different streams.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class JaxScheduler:
+    """Static (trace-time) scheduling configuration.
+
+    The per-round mutable state lives in the carry from `init_carry`:
+    {"rr_cursor": int32 scalar, "ewma_rate": float32 (K,)}.
+    """
+    policy: str
+    n_devices: int
+    ratio: float = 1.0
+    ewma_alpha: float = 0.2
+
+    @property
+    def n_scheduled(self) -> int:
+        return max(1, math.ceil(self.ratio * self.n_devices))
+
+    def init_carry(self):
+        return {"rr_cursor": jnp.int32(0),
+                "ewma_rate": jnp.ones(self.n_devices, jnp.float32)}
+
+
+def _top_n_mask(scores, n: int):
+    """Boolean mask of the n highest-scoring devices (argsort tail,
+    matching the numpy twin's `argsort(x)[-n:]`)."""
+    k = scores.shape[0]
+    idx = jnp.argsort(scores)[k - n:]
+    return jnp.zeros(k, dtype=bool).at[idx].set(True)
+
+
+def schedule_step(sched: JaxScheduler, carry, rates, key):
+    """One scheduling decision: (carry, rates, key) -> (mask, new_carry).
+
+    rates: (K,) instantaneous uplink rates. The policy string is static,
+    so each policy traces to its own branch-free program.
+    """
+    k, n = sched.n_devices, sched.n_scheduled
+    cursor = carry["rr_cursor"]
+    if sched.policy == "all":
+        mask = jnp.ones(k, dtype=bool)
+    elif sched.policy == "round_robin":
+        idx = (cursor + jnp.arange(n)) % k
+        mask = jnp.zeros(k, dtype=bool).at[idx].set(True)
+        cursor = ((cursor + n) % k).astype(jnp.int32)
+    elif sched.policy == "best_channel":
+        mask = _top_n_mask(rates, n)
+    elif sched.policy == "prop_fair":
+        priority = rates / jnp.maximum(carry["ewma_rate"], 1e-12)
+        mask = _top_n_mask(priority, n)
+    elif sched.policy == "random":
+        perm = jax.random.permutation(key, k)
+        mask = jnp.zeros(k, dtype=bool).at[perm[:n]].set(True)
+    else:
+        raise ValueError(f"unknown scheduling policy {sched.policy!r}")
+
+    served = jnp.where(mask, rates, 0.0).astype(jnp.float32)
+    ewma = ((1.0 - sched.ewma_alpha) * carry["ewma_rate"]
+            + sched.ewma_alpha * served)
+    return mask, {"rr_cursor": cursor, "ewma_rate": ewma}

@@ -22,6 +22,17 @@ weighted mean lowers to the ICI all-reduce (DESIGN.md §2).
 The model is abstracted by `GanModelSpec`, so DCGAN (the paper's
 experiment) and every assigned backbone-GAN use one protocol
 implementation.
+
+FUSED MULTI-ROUND DRIVER: `gan_rounds_scan` folds R complete rounds —
+Step 1 scheduling (core.jax_scheduling), channel timing + straggler
+exclusion (core.jax_channel), the `gan_round` model math, and the
+Fig. 1/Fig. 2 wall-clock composition — into a single `lax.scan`, so one
+XLA dispatch advances R communication rounds and returns stacked
+per-round metrics/wallclock/masks. The host-side per-round loop in
+`core.engine.Trainer(driver="host")` is retained as the equivalence
+ORACLE: for deterministic schedulers (or `fading=False`) the fused path
+must reproduce its masks bitwise and its params/metrics to float32
+round-off (tests/test_driver_equivalence.py).
 """
 from __future__ import annotations
 
@@ -32,7 +43,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ProtocolConfig
-from repro.core import losses
+from repro.core import jax_channel, jax_scheduling, losses
 from repro.core.averaging import weighted_average, broadcast_like
 from repro.optim import make_optimizer, apply_updates
 from repro.optim.optimizers import tree_add
@@ -280,6 +291,81 @@ def gan_round(spec: GanModelSpec, pcfg: ProtocolConfig, state, data_stacked,
     new_state = {"gen": new_gen, "disc": disc_avg,
                  "gen_opt": new_gen_opt, "disc_opt": new_disc_opt}
     return new_state, metrics
+
+
+# ---------------------------------------------------------------------------
+# Fused multi-round driver — R rounds per XLA dispatch
+# ---------------------------------------------------------------------------
+
+# PRNG salts for the per-round channel/scheduler randomness. The host
+# loop's numpy stream is sequential; the fused path derives independent
+# keys per round from the SAME root key the host loop folds for model
+# math, so model randomness (and hence params) agrees round-for-round.
+_SALT_RATES = 0x4A7E5
+_SALT_SCHED = 0x5C4ED
+_SALT_TIMING = 0x7133
+
+
+def count_params(tree) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(tree))
+
+
+def gan_rounds_scan(spec: GanModelSpec, pcfg: ProtocolConfig, state,
+                    data_stacked, key, n_rounds: int, *,
+                    channel, scheduler, sched_carry=None, start_round=0,
+                    disc_step_flops: float = 1e9,
+                    gen_step_flops: float = 1e9):
+    """R fused communication rounds in one `lax.scan`.
+
+    channel:   core.jax_channel.JaxChannel (static placement, jittable)
+    scheduler: core.jax_scheduling.JaxScheduler (policy static)
+    sched_carry: scheduler carry from a previous chunk (None = fresh)
+    start_round: absolute index of the first round; round t's model key
+        is `fold_in(key, t)`, matching the host loop's per-round fold so
+        chunked fused runs and the host oracle see identical streams.
+
+    Returns (state, sched_carry, out) where out stacks per-round
+    {"metrics": {...: (R,)}, "wallclock_s": (R,), "mask": (R, K) bool,
+    "weights": (R, K)}.
+    """
+    if sched_carry is None:
+        sched_carry = scheduler.init_carry()
+    disc_nparams = count_params(state["disc"])
+    gen_nparams = count_params(state["gen"])
+
+    def body(carry, t):
+        st, sc = carry
+        round_key = jax.random.fold_in(key, t)
+        k_rates = jax.random.fold_in(round_key, _SALT_RATES)
+        k_sched = jax.random.fold_in(round_key, _SALT_SCHED)
+        k_timing = jax.random.fold_in(round_key, _SALT_TIMING)
+
+        # Step 1: schedule against a fresh fading draw, then time the
+        # round (second draw, mirroring the host loop's two rng calls).
+        rates = channel.uplink_rates(k_rates, scheduler.n_scheduled)
+        mask, sc = jax_scheduling.schedule_step(scheduler, sc, rates,
+                                                k_sched)
+        timing = channel.round_timing(
+            k_timing, mask, disc_params=disc_nparams,
+            gen_params=gen_nparams, disc_step_flops=disc_step_flops,
+            gen_step_flops=gen_step_flops, n_d=pcfg.n_d, n_g=pcfg.n_g)
+        active = mask & ~timing.stragglers
+        weights = jnp.where(active, float(pcfg.sample_size),
+                            0.0).astype(jnp.float32)
+
+        # Steps 2-5
+        st, metrics = gan_round(spec, pcfg, st, data_stacked, weights,
+                                round_key)
+        wall = jax_channel.round_wallclock(timing, mask,
+                                           schedule=pcfg.schedule)
+        out = {"metrics": metrics, "wallclock_s": wall, "mask": mask,
+               "weights": weights}
+        return (st, sc), out
+
+    rounds = jnp.asarray(start_round) + jnp.arange(n_rounds)
+    (state, sched_carry), out = jax.lax.scan(body, (state, sched_carry),
+                                             rounds)
+    return state, sched_carry, out
 
 
 def centralized_step(spec: GanModelSpec, pcfg: ProtocolConfig, state, data,

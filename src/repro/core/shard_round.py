@@ -27,6 +27,17 @@ from repro.core.protocol import GanModelSpec, device_update, server_update
 from repro.core.averaging import weighted_average_psum
 
 
+def _shard_map(f, *, mesh, in_specs, out_specs):
+    """jax.shard_map on new jax; jax.experimental.shard_map on 0.4.x
+    (where the replication-checker kwarg is `check_rep`, not `check_vma`)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
+
+
 def shard_map_round(spec: GanModelSpec, pcfg: ProtocolConfig, mesh,
                     device_axes=("data",)):
     """Build a jitted round function over `mesh` with explicit collectives.
@@ -91,8 +102,8 @@ def shard_map_round(spec: GanModelSpec, pcfg: ProtocolConfig, mesh,
              "disc_opt": make_specs(state["disc_opt"], stacked)},
             {"disc_objective": rep, "gen_objective": rep, "participation": rep},
         )
-        fn = jax.shard_map(round_body, mesh=mesh, in_specs=in_specs,
-                           out_specs=out_specs, check_vma=False)
+        fn = _shard_map(round_body, mesh=mesh, in_specs=in_specs,
+                        out_specs=out_specs)
         return jax.jit(fn)(state, data_stacked, weights, round_key)
 
     return run

@@ -3,28 +3,53 @@
 Defined as FUNCTIONS so importing this module never touches jax device
 state (device count is locked at first jax init; dryrun.py sets
 XLA_FLAGS before importing anything).
+
+jax-version compatibility: `AxisType` / `make_mesh(axis_types=...)` /
+`jax.sharding.set_mesh` only exist in newer jax. On older releases
+(e.g. 0.4.x) the helpers here fall back to plain meshes and the Mesh
+context manager, which are semantically equivalent for this codebase
+(every step passes explicit NamedShardings).
 """
 from __future__ import annotations
 
 import jax
 
+_HAS_AXIS_TYPES = hasattr(jax.sharding, "AxisType")
+
 
 def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+    if _HAS_AXIS_TYPES:
+        return (jax.sharding.AxisType.Auto,) * n
+    return None
+
+
+def make_mesh(shape, axes):
+    """jax.make_mesh with Auto axis types when the installed jax has them."""
+    types = _auto(len(shape))
+    if types is not None:
+        return jax.make_mesh(shape, axes, axis_types=types)
+    return jax.make_mesh(shape, axes)
+
+
+def use_mesh(mesh):
+    """Context manager activating `mesh`: jax.sharding.set_mesh on new
+    jax, the Mesh context manager on old jax."""
+    if hasattr(jax.sharding, "set_mesh"):
+        return jax.sharding.set_mesh(mesh)
+    return mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(shape)))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(n_data: int = 1, n_model: int = 1):
     """Small mesh over host devices for CPU tests (requires
     XLA_FLAGS=--xla_force_host_platform_device_count set by the caller)."""
-    return jax.make_mesh((n_data, n_model), ("data", "model"),
-                         axis_types=_auto(2))
+    return make_mesh((n_data, n_model), ("data", "model"))
 
 
 def device_axes(multi_pod: bool):

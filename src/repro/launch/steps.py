@@ -73,12 +73,17 @@ def build_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
                      pcfg: Optional[ProtocolConfig] = None,
                      schedule: str = "serial",
                      pcfg_overrides: Optional[dict] = None,
-                     act_disc_spec: Optional[object] = "default"):
+                     act_disc_spec: Optional[object] = "default",
+                     fuse_rounds: int = 1):
     """The protocol round as the pod-scale train step.
 
     The paper's K devices = the mesh's device axes (pod x data slices).
     global_batch rows of real data are the per-round union of local
     samples: K * n_k = global_batch.
+
+    fuse_rounds > 1 wraps the round body in a `lax.scan` over
+    consecutive seeds (the fused-driver pattern of core.engine), so one
+    dispatch advances `fuse_rounds` rounds and returns stacked metrics.
     """
     plan = rules.plan_for(cfg, mesh_cfg)
     k_dev = math.prod(mesh.shape[a] for a in plan.dev_axes)
@@ -124,6 +129,15 @@ def build_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
         return protocol.gan_round(spec, pcfg, state, batch["tokens"],
                                   weights, round_key,
                                   constrain_stacked=constrain)
+
+    if fuse_rounds > 1:
+        one_round = train_step
+
+        def train_step(state, batch, weights, seed):
+            def body(s, r):
+                return one_round(s, batch, weights, r)
+            return jax.lax.scan(body, state,
+                                seed + jnp.arange(fuse_rounds))
 
     # ---- abstract state & inputs -------------------------------------
     def init_fn(key):

@@ -23,7 +23,7 @@ from repro.configs import get_arch_config, list_archs
 from repro.configs.base import MeshConfig, ProtocolConfig, ShapeConfig
 from repro.data import make_token_dataset
 from repro.launch import steps as steps_mod
-from repro.launch.mesh import _auto
+from repro.launch.mesh import make_mesh, use_mesh
 
 
 def main():
@@ -38,10 +38,17 @@ def main():
     ap.add_argument("--model-dim", type=int, default=2)
     ap.add_argument("--schedule", choices=["serial", "parallel"],
                     default="serial")
+    ap.add_argument("--fuse-rounds", type=int, default=1,
+                    help="rounds fused per XLA dispatch (lax.scan); 1 = "
+                         "host loop, >1 = the compiled multi-round driver")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--distributed", action="store_true",
                     help="multi-host TPU: call jax.distributed.initialize")
     args = ap.parse_args()
+    fuse = max(1, args.fuse_rounds)
+    if args.rounds % fuse:
+        ap.error(f"--rounds {args.rounds} must be a multiple of "
+                 f"--fuse-rounds {fuse}")
 
     if args.distributed:
         jax.distributed.initialize()
@@ -49,12 +56,12 @@ def main():
     cfg = get_arch_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    mesh = jax.make_mesh((args.data_dim, args.model_dim),
-                         ("data", "model"), axis_types=_auto(2))
+    mesh = make_mesh((args.data_dim, args.model_dim), ("data", "model"))
     mesh_cfg = MeshConfig()
     shape = ShapeConfig("train_cli", args.seq_len, args.batch, "train")
     step, abstract_args = steps_mod.build_train_step(
-        cfg, shape, mesh, mesh_cfg, schedule=args.schedule)
+        cfg, shape, mesh, mesh_cfg, schedule=args.schedule,
+        fuse_rounds=fuse)
 
     # materialize real inputs matching the abstract specs
     k_dev = args.data_dim
@@ -79,15 +86,23 @@ def main():
         lambda x, a: jnp.asarray(x, a.dtype), state, state_abs)
     weights = jnp.full((k_dev,), float(n_k))
 
-    with jax.sharding.set_mesh(mesh):
-        for r in range(args.rounds):
+    with use_mesh(mesh):
+        for r in range(0, args.rounds, fuse):
             t0 = time.time()
             state, metrics = step(state, batch, weights, jnp.int32(r))
             jax.block_until_ready(metrics)
-            print(f"round {r}: disc_obj="
-                  f"{float(metrics['disc_objective']):+.4f} "
-                  f"gen_obj={float(metrics['gen_objective']):+.4f} "
-                  f"({time.time() - t0:.2f}s)")
+            dt = time.time() - t0
+            if fuse == 1:
+                print(f"round {r}: disc_obj="
+                      f"{float(metrics['disc_objective']):+.4f} "
+                      f"gen_obj={float(metrics['gen_objective']):+.4f} "
+                      f"({dt:.2f}s)")
+            else:
+                d = np.asarray(metrics["disc_objective"])
+                g = np.asarray(metrics["gen_objective"])
+                print(f"rounds {r}..{r + fuse - 1}: disc_obj="
+                      f"{d[-1]:+.4f} gen_obj={g[-1]:+.4f} "
+                      f"({dt:.2f}s, {fuse / dt:.1f} rounds/s)")
 
     if args.ckpt_dir:
         from repro.checkpoint import save_checkpoint

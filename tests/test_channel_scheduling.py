@@ -1,8 +1,16 @@
+import math
+
+import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core.averaging import weighted_average
 from repro.core.channel import ChannelConfig, ChannelSimulator, round_wallclock
+from repro.core.jax_scheduling import JaxScheduler, schedule_step
 from repro.core.scheduling import SchedulerState, schedule_round
+
+POLICIES = ("all", "round_robin", "best_channel", "prop_fair", "random")
 
 
 def _sim(**kw):
@@ -96,3 +104,65 @@ class TestScheduling:
         st = SchedulerState("nope", 4)
         with pytest.raises(ValueError):
             schedule_round(st, np.ones(4), np.random.default_rng(0))
+
+
+class TestSeededInvariants:
+    """Seeded property tests (hypothesis-free) over both scheduler twins
+    — the invariants Figs. 3-6 lean on."""
+
+    @pytest.mark.parametrize("policy", POLICIES)
+    def test_mask_has_exactly_n_scheduled(self, policy):
+        for seed in range(8):
+            rng = np.random.default_rng(seed)
+            k = int(rng.integers(2, 12))
+            ratio = float(rng.uniform(0.05, 1.0))
+            np_state = SchedulerState(policy, k, ratio=ratio)
+            jx = JaxScheduler(policy=policy, n_devices=k, ratio=ratio)
+            carry = jx.init_carry()
+            n = np_state.n_scheduled
+            assert n == jx.n_scheduled == max(1, math.ceil(ratio * k))
+            expect = k if policy == "all" else n   # "all" ignores ratio
+            for t in range(4):
+                rates = rng.uniform(0.1, 9.0, k)
+                np_mask = schedule_round(np_state, rates, rng)
+                jx_mask, carry = schedule_step(
+                    jx, carry, jnp.asarray(rates, jnp.float32),
+                    jax.random.fold_in(jax.random.PRNGKey(seed), t))
+                assert np_mask.sum() == expect
+                assert int(np.asarray(jx_mask).sum()) == expect
+
+    def test_round_robin_covers_all_devices_in_ceil_k_over_n_rounds(self):
+        for seed, (k, ratio) in enumerate([(10, 0.3), (7, 0.5), (5, 0.2),
+                                           (8, 1.0), (9, 0.34)]):
+            rng = np.random.default_rng(seed)
+            np_state = SchedulerState("round_robin", k, ratio=ratio)
+            jx = JaxScheduler(policy="round_robin", n_devices=k,
+                              ratio=ratio)
+            carry = jx.init_carry()
+            budget = math.ceil(k / np_state.n_scheduled)
+            seen_np = np.zeros(k, dtype=bool)
+            seen_jx = np.zeros(k, dtype=bool)
+            for t in range(budget):
+                rates = rng.uniform(0.1, 9.0, k)
+                seen_np |= schedule_round(np_state, rates, rng)
+                m, carry = schedule_step(
+                    jx, carry, jnp.asarray(rates, jnp.float32),
+                    jax.random.fold_in(jax.random.PRNGKey(seed), t))
+                seen_jx |= np.asarray(m)
+            assert seen_np.all() and seen_jx.all()
+
+    def test_zero_weight_devices_never_affect_weighted_average(self):
+        """Algorithm 2: a zero-weight replica is a strict no-op no matter
+        how corrupt its parameters are (straggler/unscheduled contract)."""
+        for seed in range(10):
+            rng = np.random.default_rng(seed)
+            k = int(rng.integers(2, 7))
+            base = jnp.asarray(rng.standard_normal((k, 5)), jnp.float32)
+            w = jnp.asarray(rng.uniform(0.5, 3.0, k), jnp.float32)
+            avg1 = weighted_average({"p": base}, w)["p"]
+            poison = float(rng.uniform(1e3, 1e6))
+            extra = jnp.concatenate([base, poison * jnp.ones((1, 5))])
+            w2 = jnp.concatenate([w, jnp.zeros(1)])
+            avg2 = weighted_average({"p": extra}, w2)["p"]
+            np.testing.assert_allclose(np.asarray(avg1), np.asarray(avg2),
+                                       atol=1e-5)

@@ -1,0 +1,261 @@
+"""Fused-driver equivalence: the compiled multi-round scan must
+reproduce the per-round host loop, and the pure-JAX scheduler/channel
+twins must agree with their numpy oracles.
+
+Contract (see core/engine.py, core/protocol.py docstrings):
+  * params/metrics: float32 round-off agreement, any scheduler
+  * scheduler masks: BITWISE agreement for deterministic policies
+  * wallclock: float32 round-off agreement when fading=False (with
+    fading the streams differ, distribution-level only)
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ProtocolConfig
+from repro.configs.dcgan import DCGANConfig
+from repro.core import Trainer, protocol
+from repro.core.channel import ChannelConfig, ChannelSimulator, round_wallclock
+from repro.core.jax_channel import JaxChannel
+from repro.core.jax_channel import round_wallclock as jax_round_wallclock
+from repro.core.jax_scheduling import JaxScheduler, schedule_step
+from repro.core.scheduling import SchedulerState, schedule_round
+from repro.models import dcgan
+from repro.models.specs import make_dcgan_spec
+
+KEY = jax.random.PRNGKey(0)
+# 8x8 two-stage DCGAN: small enough that many-round runs stay cheap
+CFG = DCGANConfig(nz=8, ngf=8, ndf=8, nc=1, image_size=8)
+SPEC = make_dcgan_spec(CFG)
+K = 4
+DATA = jax.random.normal(jax.random.PRNGKey(9), (K, 8, 8, 8, 1))
+
+
+def make_trainer(driver, *, schedule="serial", scheduler="all", ratio=1.0,
+                 channel_kw=None):
+    pcfg = ProtocolConfig(n_devices=K, n_d=1, n_g=1, sample_size=4,
+                          server_sample_size=4, lr_d=1e-3, lr_g=1e-3,
+                          schedule=schedule, scheduler=scheduler,
+                          scheduling_ratio=ratio)
+    chan = ChannelConfig(n_devices=K, seed=3, **(channel_kw or {}))
+    return Trainer(SPEC, pcfg, lambda k: dcgan.gan_init(k, CFG), DATA, KEY,
+                   channel_cfg=chan, driver=driver)
+
+
+def assert_trees_close(a, b, atol=2e-5):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32), atol=atol)
+
+
+def assert_histories_match(host_hist, fused_hist, *, wallclock=False):
+    assert len(host_hist) == len(fused_hist)
+    for rh, rf in zip(host_hist, fused_hist):
+        assert rh.round == rf.round
+        np.testing.assert_array_equal(rh.mask, rf.mask)   # bitwise
+        for k in rh.metrics:
+            assert abs(rh.metrics[k] - rf.metrics[k]) < 1e-4, \
+                (rh.round, k, rh.metrics[k], rf.metrics[k])
+        if wallclock:
+            np.testing.assert_allclose(rh.wallclock_s, rf.wallclock_s,
+                                       rtol=1e-5)
+
+
+class TestFusedVsHostLoop:
+    @pytest.mark.parametrize("schedule", ["serial", "parallel"])
+    def test_fused_matches_host_over_rounds(self, schedule):
+        """Satellite (a): >=5 rounds, params + per-round metrics + masks."""
+        th = make_trainer("host", schedule=schedule)
+        tf = make_trainer("fused", schedule=schedule)
+        h, f = th.run(6), tf.run(6)
+        assert_trees_close(th.state, tf.state)
+        assert_histories_match(h, f)
+
+    def test_round_robin_masks_and_wallclock_fading_off(self):
+        """Deterministic channel: masks bitwise AND wallclock to f32
+        round-off, while the cursor wraps (K=4, n=2 -> period 2)."""
+        kw = dict(scheduler="round_robin", ratio=0.5,
+                  channel_kw={"fading": False})
+        th = make_trainer("host", **kw)
+        tf = make_trainer("fused", **kw)
+        h, f = th.run(5), tf.run(5)
+        assert_trees_close(th.state, tf.state)
+        assert_histories_match(h, f, wallclock=True)
+        # the rotating window actually rotated
+        assert (h[0].mask != h[1].mask).any()
+        np.testing.assert_array_equal(h[0].mask, h[2].mask)
+
+    def test_chunked_fused_run_matches_one_shot(self):
+        """run(2) + run(4) must equal run(6): the scheduler carry and the
+        absolute round index survive chunk boundaries."""
+        ta = make_trainer("fused", scheduler="round_robin", ratio=0.5)
+        tb = make_trainer("fused", scheduler="round_robin", ratio=0.5)
+        ta.run(2)
+        ta.run(4)
+        tb.run(6)
+        assert_trees_close(ta.state, tb.state)
+        assert_histories_match(ta.history, tb.history)
+
+    def test_fused_straggler_exclusion_matches_weights(self):
+        """A sub-round deadline makes every scheduled device a straggler:
+        weights go to zero and wallclock is the broadcast-only path —
+        identically in both drivers."""
+        kw = dict(channel_kw={"fading": False,
+                              "straggler_deadline_s": 1e-9})
+        th = make_trainer("host", **kw)
+        tf = make_trainer("fused", **kw)
+        h, f = th.run(3), tf.run(3)
+        assert_histories_match(h, f, wallclock=True)
+        assert all(r.metrics["participation"] == 0.0 for r in f)
+        assert_trees_close(th.state, tf.state)
+
+
+class TestSchedulerTwinParity:
+    """Satellite (b): each JAX policy selects the same device sets as its
+    numpy twin under identical rates."""
+
+    @pytest.mark.parametrize("policy", ["all", "round_robin",
+                                        "best_channel", "prop_fair"])
+    def test_policy_matches_numpy_twin(self, policy):
+        k, ratio, rounds = 5, 0.4, 12          # n=2: cursor wraps at 5
+        rng = np.random.default_rng(11)
+        np_state = SchedulerState(policy, k, ratio=ratio)
+        jx = JaxScheduler(policy=policy, n_devices=k, ratio=ratio)
+        carry = jx.init_carry()
+        assert jx.n_scheduled == np_state.n_scheduled
+        for t in range(rounds):
+            rates = rng.uniform(0.5, 10.0, k)   # distinct w.p. 1
+            np_mask = schedule_round(np_state, rates, rng)
+            jx_mask, carry = schedule_step(
+                jx, carry, jnp.asarray(rates, jnp.float32),
+                jax.random.fold_in(KEY, t))
+            np.testing.assert_array_equal(np_mask, np.asarray(jx_mask))
+            np.testing.assert_allclose(np.asarray(carry["ewma_rate"]),
+                                       np_state.ewma_rate, rtol=1e-5)
+        if policy == "round_robin":
+            # 12 rounds x n=2 -> cursor 24 % 5 == 4 in both twins
+            assert int(carry["rr_cursor"]) == np_state.rr_cursor == 4
+
+    def test_prop_fair_ewma_drives_rotation(self):
+        """Served devices' EWMA rises, shifting priority to unserved
+        ones — the numpy twin's rotation property, on the JAX side."""
+        jx = JaxScheduler(policy="prop_fair", n_devices=4, ratio=0.5)
+        carry = jx.init_carry()
+        rates = jnp.ones(4)
+        m1, carry = schedule_step(jx, carry, rates, KEY)
+        m2, carry = schedule_step(jx, carry, rates, KEY)
+        assert (np.asarray(m1) != np.asarray(m2)).any()
+
+    def test_random_policy_counts_and_coverage(self):
+        """`random` matches in distribution: always exactly n scheduled,
+        every device selected eventually."""
+        jx = JaxScheduler(policy="random", n_devices=6, ratio=0.34)
+        carry = jx.init_carry()
+        seen = np.zeros(6, dtype=bool)
+        for t in range(60):
+            mask, carry = schedule_step(jx, carry, jnp.ones(6),
+                                        jax.random.fold_in(KEY, t))
+            mask = np.asarray(mask)
+            assert mask.sum() == jx.n_scheduled
+            seen |= mask
+        assert seen.all()
+
+    def test_unknown_policy_raises(self):
+        jx = JaxScheduler(policy="nope", n_devices=4)
+        with pytest.raises(ValueError):
+            schedule_step(jx, jx.init_carry(), jnp.ones(4), KEY)
+
+
+class TestChannelTwinParity:
+    def _pair(self, **kw):
+        cfg = ChannelConfig(n_devices=6, seed=3, **kw)
+        return ChannelSimulator(cfg), JaxChannel(cfg)
+
+    def test_placement_and_static_rates_match(self):
+        np_sim, jx_sim = self._pair(fading=False)
+        np.testing.assert_allclose(np.asarray(jx_sim.dist_km),
+                                   np_sim.dist_km, rtol=1e-6)
+        for n_sched in (1, 3, 6):
+            np.testing.assert_allclose(
+                np.asarray(jx_sim.uplink_rates(KEY, n_sched)),
+                np_sim.uplink_rates(n_sched), rtol=1e-5)
+        np.testing.assert_allclose(jx_sim.downlink_rate_s,
+                                   np_sim.downlink_rate(), rtol=1e-6)
+
+    @pytest.mark.parametrize("schedule,fedgan", [("serial", False),
+                                                 ("parallel", False),
+                                                 ("serial", True)])
+    def test_round_timing_and_wallclock_match(self, schedule, fedgan):
+        np_sim, jx_sim = self._pair(fading=False)
+        mask = np.array([True, True, False, True, False, True])
+        kw = dict(disc_params=10_000, gen_params=12_000,
+                  disc_step_flops=1e9, gen_step_flops=1e9, n_d=2, n_g=2,
+                  fedgan=fedgan)
+        t_np = np_sim.round_timing(mask=mask, **kw)
+        t_jx = jx_sim.round_timing(KEY, jnp.asarray(mask), **kw)
+        np.testing.assert_allclose(np.asarray(t_jx.upload_s), t_np.upload_s,
+                                   rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(t_jx.compute_dev_s),
+                                   t_np.compute_dev_s, rtol=1e-5)
+        np.testing.assert_allclose(float(t_jx.compute_srv_s),
+                                   t_np.compute_srv_s, rtol=1e-5)
+        np.testing.assert_array_equal(np.asarray(t_jx.stragglers),
+                                      t_np.stragglers)
+        w_np = round_wallclock(t_np, mask, schedule=schedule, fedgan=fedgan)
+        w_jx = jax_round_wallclock(t_jx, jnp.asarray(mask),
+                                   schedule=schedule, fedgan=fedgan)
+        np.testing.assert_allclose(float(w_jx), w_np, rtol=1e-5)
+
+    def test_all_stragglers_falls_back_to_broadcast(self):
+        np_sim, jx_sim = self._pair(fading=False,
+                                    straggler_deadline_s=1e-12)
+        mask = np.ones(6, dtype=bool)
+        kw = dict(disc_params=10_000, gen_params=12_000,
+                  disc_step_flops=1e9, gen_step_flops=1e9, n_d=2, n_g=2)
+        t_np = np_sim.round_timing(mask=mask, **kw)
+        t_jx = jx_sim.round_timing(KEY, jnp.asarray(mask), **kw)
+        assert np.asarray(t_jx.stragglers).all()
+        w_np = round_wallclock(t_np, mask, schedule="serial")
+        w_jx = jax_round_wallclock(t_jx, jnp.asarray(mask),
+                                   schedule="serial")
+        np.testing.assert_allclose(float(w_jx), w_np, rtol=1e-5)
+        np.testing.assert_allclose(float(w_jx), t_np.broadcast_s, rtol=1e-5)
+
+    def test_fading_rates_match_in_distribution(self):
+        """jax.random vs numpy Exp(1) streams: per-device mean uplink
+        rate over many draws agrees (the twins share every deterministic
+        factor, so only the fading marginal is being compared)."""
+        np_sim, jx_sim = self._pair(fading=True)
+        n = 2000
+        np_rates = np.stack([np_sim.uplink_rates(3) for _ in range(n)])
+        keys = jax.random.split(jax.random.PRNGKey(42), n)
+        jx_rates = np.asarray(
+            jax.vmap(lambda k: jx_sim.uplink_rates(k, 3))(keys))
+        np.testing.assert_allclose(jx_rates.mean(0), np_rates.mean(0),
+                                   rtol=0.1)
+        np.testing.assert_allclose(jx_rates.std(0), np_rates.std(0),
+                                   rtol=0.15)
+
+
+class TestGanRoundsScanApi:
+    def test_scan_returns_stacked_outputs(self):
+        pcfg = ProtocolConfig(n_devices=K, n_d=1, n_g=1, sample_size=4,
+                              server_sample_size=4)
+        state = protocol.make_train_state(
+            KEY, lambda k: dcgan.gan_init(k, CFG), pcfg, K)
+        chan_cfg = ChannelConfig(n_devices=K, seed=3)
+        state, carry, out = protocol.gan_rounds_scan(
+            SPEC, pcfg, state, DATA, KEY, 3,
+            channel=JaxChannel(chan_cfg),
+            scheduler=JaxScheduler(policy="all", n_devices=K))
+        assert out["wallclock_s"].shape == (3,)
+        assert out["mask"].shape == (3, K) and out["mask"].dtype == bool
+        assert out["weights"].shape == (3, K)
+        for v in out["metrics"].values():
+            assert v.shape == (3,)
+        assert set(carry) == {"rr_cursor", "ewma_rate"}
+        for leaf in jax.tree_util.tree_leaves(state):
+            assert bool(jnp.isfinite(leaf).all())

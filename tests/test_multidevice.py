@@ -78,13 +78,13 @@ def test_mini_dryrun_train_and_decode_lower_on_mesh():
 
         cfg = dataclasses.replace(get_arch_config('qwen3-1.7b').reduced(),
                                   vocab=512)
-        mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh, use_mesh
+        mesh = make_mesh((2, 4), ('data', 'model'))
         mesh_cfg = MeshConfig()
         train_shape = ShapeConfig('mini_train', 32, 8, 'train')
         step, args = steps_mod.build_train_step(cfg, train_shape, mesh,
                                                 mesh_cfg)
-        with jax.sharding.set_mesh(mesh):
+        with use_mesh(mesh):
             compiled = step.lower(*args).compile()
             r = analyze_compiled(compiled, 8)
         assert r['roofline']['flops'] > 0
@@ -94,14 +94,14 @@ def test_mini_dryrun_train_and_decode_lower_on_mesh():
         dec_shape = ShapeConfig('mini_decode', 64, 8, 'decode')
         step, args = steps_mod.build_decode_step(cfg, dec_shape, mesh,
                                                  mesh_cfg)
-        with jax.sharding.set_mesh(mesh):
+        with use_mesh(mesh):
             compiled = step.lower(*args).compile()
         print('decode lowers OK')
 
         pre_shape = ShapeConfig('mini_prefill', 64, 8, 'prefill')
         step, args = steps_mod.build_prefill_step(cfg, pre_shape, mesh,
                                                   mesh_cfg)
-        with jax.sharding.set_mesh(mesh):
+        with use_mesh(mesh):
             compiled = step.lower(*args).compile()
         print('prefill lowers OK')
     """)
@@ -119,7 +119,7 @@ def test_protocol_round_executes_on_mesh():
         from repro.core import protocol
         from repro.models import dcgan
         from repro.models.specs import make_dcgan_spec
-        from repro.launch.mesh import make_host_mesh
+        from repro.launch.mesh import make_host_mesh, use_mesh
 
         cfg = DCGANConfig(nz=8, ngf=8, ndf=8, nc=1, image_size=16)
         spec = make_dcgan_spec(cfg)
@@ -133,7 +133,7 @@ def test_protocol_round_executes_on_mesh():
             jax.random.normal(key, (4, 8, 16, 16, 1)),
             NamedSharding(mesh, P('data')))
         w = jnp.full((4,), 4.0)
-        with jax.sharding.set_mesh(mesh):
+        with use_mesh(mesh):
             new_state, metrics = jax.jit(
                 lambda s, d, ww, kk: protocol.gan_round(spec, pcfg, s, d,
                                                         ww, kk)
