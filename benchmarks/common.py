@@ -22,18 +22,21 @@ import numpy as np
 from repro.configs.base import ProtocolConfig
 from repro.configs.dcgan import DCGANConfig
 from repro.core import Trainer
+from repro.core.engine import FUSED_ALGORITHMS
 from repro.core.channel import ChannelConfig
 from repro.data import make_image_dataset, partition, DATASET_SPECS
-from repro.metrics import fid_score, make_feature_extractor
+from repro.metrics import (feature_stats_jnp, frechet_distance_jnp,
+                           make_feature_extractor)
 from repro.models import dcgan
 from repro.models.specs import make_dcgan_spec
 
 FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
 ROUNDS = int(os.environ.get("REPRO_BENCH_ROUNDS", "60" if FULL else "12"))
 EVAL_EVERY = int(os.environ.get("REPRO_BENCH_EVAL_EVERY", "4"))
-# "fused" = compiled multi-round driver (chunks of eval_every rounds per
-# dispatch); "host" = the per-round oracle loop.
-DRIVER = os.environ.get("REPRO_BENCH_DRIVER", "fused")
+# "fused" = compiled multi-round driver (the whole run is one donated
+# chunk; FID runs in-scan); "host" = the per-round oracle loop; "auto"
+# = fused where the algorithm supports it (proposed, fedgan).
+DRIVER = os.environ.get("REPRO_BENCH_DRIVER", "auto")
 
 
 def dataset_for(name: str):
@@ -55,8 +58,9 @@ def dcgan_for(dataset: str) -> DCGANConfig:
 
 
 def protocol_for(*, schedule="serial", k=10, scheduler="all", ratio=1.0,
-                 optimizer="adam") -> ProtocolConfig:
-    # paper: n_d = n_g = 5, m_k = 128; reduced keeps the ratio structure
+                 optimizer="adam", bits=16) -> ProtocolConfig:
+    # paper: n_d = n_g = 5, m_k = 128, 16-bit uplink; reduced keeps the
+    # ratio structure
     return ProtocolConfig(
         n_devices=k,
         n_d=5 if FULL else 2,
@@ -68,6 +72,7 @@ def protocol_for(*, schedule="serial", k=10, scheduler="all", ratio=1.0,
         schedule=schedule,
         scheduler=scheduler,
         scheduling_ratio=ratio,
+        quantize_bits=bits,
         optimizer=optimizer,
     )
 
@@ -86,23 +91,28 @@ class Curve:
 def run_experiment(label: str, *, dataset="celeba", algorithm="proposed",
                    schedule="serial", k=10, scheduler="all", ratio=1.0,
                    rounds=None, seed=0, channel_kw=None,
-                   gen_loss="nonsaturating", driver=None) -> Curve:
+                   gen_loss="nonsaturating", driver=None,
+                   bits=16) -> Curve:
     ds = dataset_for(dataset)
     cfg = dcgan_for(ds)
     spec = make_dcgan_spec(cfg, gen_loss_variant=gen_loss)
     pcfg = protocol_for(schedule=schedule, k=k, scheduler=scheduler,
-                        ratio=ratio)
+                        ratio=ratio, bits=bits)
     n = 1280 if FULL else 320
     imgs, labels = make_image_dataset(ds, n, seed=seed)
     shards = jnp.asarray(partition(imgs, k, seed=seed))
 
     feat = make_feature_extractor(cfg.nc)
     real_feats = feat(jnp.asarray(imgs[: min(n, 512)]))
+    # pure-jnp FID against precomputed real stats: jittable, so fused
+    # runs evaluate IN-SCAN (one compiled chunk, state stays donated)
+    real_mu, real_cov = feature_stats_jnp(real_feats)
 
     def fid_fn(gen_params, key):
         z = jax.random.normal(key, (256, cfg.nz))
         fake = dcgan.generator_apply(gen_params, cfg, z)
-        return fid_score(real_feats, feat(fake))
+        mu, cov = feature_stats_jnp(feat(fake))
+        return frechet_distance_jnp(real_mu, real_cov, mu, cov)
 
     # FLOP estimates for the channel-time model (fwd+bwd ~ 3x fwd; DCGAN
     # fwd ~ 2 * params * pixels_factor — a coarse constant is fine, the
@@ -111,12 +121,18 @@ def run_experiment(label: str, *, dataset="celeba", algorithm="proposed",
 
     chan = ChannelConfig(n_devices=k, seed=seed,
                          **(channel_kw or {}))
+    resolved_driver = driver or DRIVER
+    if resolved_driver == "fused" and algorithm not in FUSED_ALGORITHMS:
+        # REPRO_BENCH_DRIVER=fused applies to every figure's settings;
+        # algorithms without a fused path (centralized) keep the host
+        # loop instead of aborting the sweep.
+        resolved_driver = "host"
     trainer = Trainer(spec, pcfg, lambda kk: dcgan.gan_init(kk, cfg),
                       shards, jax.random.PRNGKey(seed),
                       algorithm=algorithm, channel_cfg=chan,
                       disc_step_flops=step_flops,
                       gen_step_flops=step_flops,
-                      driver=driver or DRIVER)
+                      driver=resolved_driver)
     hist = trainer.run(rounds or ROUNDS, eval_every=EVAL_EVERY,
                        fid_fn=fid_fn)
     return Curve(

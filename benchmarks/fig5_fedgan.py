@@ -1,6 +1,12 @@
 """Fig. 5 — comparison with FedGAN [9]. Paper claims: proposed-serial
 converges faster in wall-clock than FedGAN (half the upload bytes, half
-the device compute); proposed-parallel ~ FedGAN."""
+the device compute); proposed-parallel ~ FedGAN.
+
+Both algorithms run the FUSED driver (PR 2: FedGAN shares the unified
+`rounds_scan` engine) with the paper's 16-bit quantized uplink
+exercised per round; the trailing rows ablate the uplink bit width,
+which shrinks simulated upload time for both algorithms.
+"""
 from __future__ import annotations
 
 import json
@@ -13,13 +19,16 @@ from benchmarks.common import run_experiment, last_fid, emit_csv_row
 def main(out_dir="results/bench"):
     os.makedirs(out_dir, exist_ok=True)
     curves = []
-    settings = [("proposed-serial", "proposed", "serial"),
-                ("proposed-parallel", "proposed", "parallel"),
-                ("fedgan", "fedgan", "serial")]
-    for label, algorithm, schedule in settings:
+    settings = [("proposed-serial", "proposed", "serial", 16),
+                ("proposed-parallel", "proposed", "parallel", 16),
+                ("fedgan", "fedgan", "serial", 16),
+                ("proposed-serial-8bit", "proposed", "serial", 8),
+                ("fedgan-8bit", "fedgan", "serial", 8)]
+    for label, algorithm, schedule, bits in settings:
         t0 = time.time()
         c = run_experiment(f"fig5/{label}", dataset="celeba",
-                           algorithm=algorithm, schedule=schedule)
+                           algorithm=algorithm, schedule=schedule,
+                           bits=bits)
         dt = (time.time() - t0) * 1e6 / max(len(c.rounds), 1)
         curves.append(c)
         emit_csv_row(f"fig5_{label}", dt,

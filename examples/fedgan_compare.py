@@ -1,6 +1,10 @@
 """Head-to-head: the proposed framework (serial schedule) vs FedGAN [9]
 on the same fleet, data, and channel — miniature of the paper's Fig. 5.
 
+Both algorithms run the fused multi-round driver (one XLA dispatch for
+the whole run, FID evaluated in-scan) with the paper's 16-bit quantized
+uplink; --bits ablates the uplink width, --driver pins a driver.
+
     PYTHONPATH=src python examples/fedgan_compare.py --rounds 12
 """
 import argparse
@@ -13,52 +17,66 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ProtocolConfig
+from repro.core import Trainer, protocol, quantize
 from repro.configs.dcgan import DCGANConfig
-from repro.core import Trainer
 from repro.data import make_image_dataset, partition
-from repro.metrics import fid_score, make_feature_extractor
+from repro.metrics import (feature_stats_jnp, frechet_distance_jnp,
+                           make_feature_extractor)
 from repro.models import dcgan
 from repro.models.specs import make_dcgan_spec
 
 
-def run(algorithm, schedule, rounds):
+def run(algorithm, schedule, rounds, driver, bits):
     cfg = DCGANConfig(nz=32, ngf=16, ndf=16, nc=3, image_size=32)
     spec = make_dcgan_spec(cfg, gen_loss_variant="nonsaturating")
     pcfg = ProtocolConfig(n_devices=10, n_d=2, n_g=2, sample_size=16,
                           server_sample_size=16, lr_d=2e-4, lr_g=2e-4,
-                          schedule=schedule, optimizer="adam")
+                          schedule=schedule, optimizer="adam",
+                          quantize_bits=bits)
     imgs, _ = make_image_dataset("celeba32", 640)
     shards = jnp.asarray(partition(imgs, 10))
     feat = make_feature_extractor(cfg.nc)
-    real_feats = feat(jnp.asarray(imgs[:512]))
+    real_mu, real_cov = feature_stats_jnp(feat(jnp.asarray(imgs[:512])))
 
     def fid_fn(gen_params, key):
         z = jax.random.normal(key, (256, cfg.nz))
-        return fid_score(real_feats,
-                         feat(dcgan.generator_apply(gen_params, cfg, z)))
+        mu, cov = feature_stats_jnp(
+            feat(dcgan.generator_apply(gen_params, cfg, z)))
+        return frechet_distance_jnp(real_mu, real_cov, mu, cov)
 
     tr = Trainer(spec, pcfg, lambda k: dcgan.gan_init(k, cfg), shards,
                  jax.random.PRNGKey(0), algorithm=algorithm,
-                 disc_step_flops=1e10, gen_step_flops=1e10)
+                 disc_step_flops=1e10, gen_step_flops=1e10, driver=driver)
     hist = tr.run(rounds, eval_every=rounds, fid_fn=fid_fn)
-    return hist[-1]
+    payload_mbit = protocol.uplink_payload_bits(
+        tr.state, pcfg, fedgan=algorithm == "fedgan") / 1e6
+    return hist[-1], tr.driver, payload_mbit
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=12)
+    ap.add_argument("--driver", choices=["auto", "fused", "host"],
+                    default="auto")
+    ap.add_argument("--bits", type=int, default=16,
+                    help="uplink quantization width (paper: 16; >=32 "
+                         "disables quantization)")
     args = ap.parse_args()
 
-    prop = run("proposed", "serial", args.rounds)
-    fed = run("fedgan", "serial", args.rounds)
+    prop, d1, mb1 = run("proposed", "serial", args.rounds, args.driver,
+                        args.bits)
+    fed, d2, mb2 = run("fedgan", "serial", args.rounds, args.driver,
+                       args.bits)
     print(f"proposed-serial : FID={prop.fid:8.2f}  "
-          f"wallclock={prop.cumulative_s:8.2f}s")
+          f"wallclock={prop.cumulative_s:8.2f}s  "
+          f"uplink={mb1:6.2f} Mbit/round/device  [{d1}]")
     print(f"fedgan          : FID={fed.fid:8.2f}  "
-          f"wallclock={fed.cumulative_s:8.2f}s")
+          f"wallclock={fed.cumulative_s:8.2f}s  "
+          f"uplink={mb2:6.2f} Mbit/round/device  [{d2}]")
     speedup = fed.cumulative_s / prop.cumulative_s
     print(f"-> proposed finishes the same number of rounds "
           f"{speedup:.2f}x faster in simulated wall-clock "
-          f"(half the upload bytes, half the device compute)")
+          f"({mb2 / mb1:.1f}x fewer upload bits, half the device compute)")
 
 
 if __name__ == "__main__":

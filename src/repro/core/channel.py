@@ -79,12 +79,19 @@ class ChannelSimulator:
     def round_timing(self, *, mask: np.ndarray, disc_params: int,
                      gen_params: int, disc_step_flops: float,
                      gen_step_flops: float, n_d: int, n_g: int,
-                     fedgan: bool = False) -> RoundTiming:
-        """Wall-clock pieces of one communication round."""
+                     fedgan: bool = False,
+                     uplink_bits: float | None = None) -> RoundTiming:
+        """Wall-clock pieces of one communication round.
+
+        uplink_bits: total per-device upload payload in bits (e.g.
+        `quantize.tree_bits` at the protocol's quantization width);
+        None falls back to `bits_per_param` x the uploaded param count.
+        """
         cfg = self.cfg
         rates = self.uplink_rates(int(mask.sum()))
-        up_bits = cfg.bits_per_param * (
-            disc_params + gen_params if fedgan else disc_params)
+        up_bits = uplink_bits if uplink_bits is not None else (
+            cfg.bits_per_param * (
+                disc_params + gen_params if fedgan else disc_params))
         upload = np.where(mask, up_bits / np.maximum(rates, 1.0), 0.0)
         dev_flops = n_d * disc_step_flops + (n_g * gen_step_flops if fedgan else 0.0)
         compute_dev = np.where(mask, dev_flops / cfg.device_flops, 0.0)

@@ -4,21 +4,26 @@ evaluation. This is the paper's experimental harness (Figs 3-6).
 
 Two drivers:
 
-  driver="fused" (default for the proposed protocol) — chunks of R
-      rounds run through `protocol.gan_rounds_scan`: scheduling, channel
-      timing, the model math, and wall-clock accounting are one XLA
-      dispatch per chunk (donated state, no per-round host round-trip).
-      Chunk boundaries fall on `eval_every` so FID evaluation interleaves
-      exactly as in the host loop.
+  driver="fused" — chunks of R rounds run through the unified engine
+      `protocol.rounds_scan` (as `gan_rounds_scan` for the proposed
+      protocol, `fedgan.fedgan_rounds_scan` for FedGAN): scheduling,
+      channel timing, the quantized uplink, the model math, and
+      wall-clock accounting are one XLA dispatch per chunk (donated
+      state, no per-round host round-trip). With a JITTABLE fid_fn
+      (e.g. metrics.fid_score_jnp-based), FID evaluation runs IN-SCAN
+      via lax.cond, so the whole run is a single compiled chunk; a
+      non-traceable fid_fn falls back to eval-boundary chunking.
   driver="host" — the original per-round host loop over numpy
       scheduling/channel state. Retained as the EQUIVALENCE ORACLE: with
       a deterministic scheduler (or fading=False) the fused driver must
       reproduce its masks bitwise and params/metrics to float32
-      round-off, which tests/test_driver_equivalence.py enforces.
+      round-off, which tests/test_driver_equivalence.py enforces — for
+      BOTH the proposed protocol and FedGAN.
+  driver="auto" (default) — fused where supported, host otherwise.
 
-FedGAN and centralized baselines always use the host loop (their round
-costs are per-round host decisions and they don't need thousands of
-cheap rounds).
+The centralized baseline has no fused path (its round has no
+scheduling/channel structure to fold); requesting driver="fused" for it
+raises instead of silently running the host loop.
 """
 from __future__ import annotations
 
@@ -36,6 +41,9 @@ from repro.core.channel import ChannelConfig, ChannelSimulator, round_wallclock
 from repro.core.jax_channel import JaxChannel
 from repro.core.jax_scheduling import JaxScheduler
 from repro.core.scheduling import SchedulerState, schedule_round
+
+# Algorithms with a fused multi-round scan path (the unified engine).
+FUSED_ALGORITHMS = ("proposed", "fedgan")
 
 
 @dataclasses.dataclass
@@ -59,7 +67,7 @@ class Trainer:
                  algorithm: str = "proposed",
                  channel_cfg: Optional[ChannelConfig] = None,
                  disc_step_flops: float = 1e9, gen_step_flops: float = 1e9,
-                 driver: str = "fused"):
+                 driver: str = "auto"):
         self.spec, self.pcfg = spec, pcfg
         self.algorithm = algorithm
         self.key = key
@@ -73,10 +81,16 @@ class Trainer:
         self.rng = np.random.default_rng(0)
         self.disc_step_flops = disc_step_flops
         self.gen_step_flops = gen_step_flops
-        if driver not in ("fused", "host"):
+        if driver not in ("auto", "fused", "host"):
             raise ValueError(f"unknown driver {driver!r}")
-        # only the proposed protocol has a fused scan path
-        self.driver = driver if algorithm == "proposed" else "host"
+        if driver == "fused" and algorithm not in FUSED_ALGORITHMS:
+            raise ValueError(
+                f"driver='fused' is not supported for algorithm "
+                f"{algorithm!r} (fused algorithms: {FUSED_ALGORITHMS}); "
+                f"use driver='host' or 'auto'")
+        if driver == "auto":
+            driver = "fused" if algorithm in FUSED_ALGORITHMS else "host"
+        self.driver = driver
 
         if algorithm == "fedgan":
             self.state = fedgan.make_fedgan_state(key, init_fn, pcfg,
@@ -106,6 +120,10 @@ class Trainer:
 
         self._disc_nparams = protocol.count_params(self.state["disc"])
         self._gen_nparams = protocol.count_params(self.state["gen"])
+        # Actual uplink payload at the protocol's quantization width
+        # (both nets for FedGAN) — drives the channel's upload timing.
+        self._uplink_bits = protocol.uplink_payload_bits(
+            self.state, pcfg, fedgan=algorithm == "fedgan")
         self.history: list[RoundRecord] = []
         self._clock = 0.0
         self._round_index = 0
@@ -122,29 +140,60 @@ class Trainer:
     # ------------------------------------------------------------------
     # fused driver — R rounds per dispatch
     # ------------------------------------------------------------------
-    def _chunk_fn(self, n: int):
-        """Jitted `gan_rounds_scan` over a fixed chunk length n; the
-        start round is traced so one compile serves every chunk of this
-        length. State and scheduler carry are donated."""
-        fn = self._chunk_fns.get(n)
-        if fn is None:
-            spec, pcfg = self.spec, self.pcfg
+    def _rounds_scan_fn(self):
+        """The unified engine entry for this algorithm."""
+        if self.algorithm == "fedgan":
+            return fedgan.fedgan_rounds_scan
+        return protocol.gan_rounds_scan
 
-            def run_chunk(state, sched_carry, data, key, start_round):
-                return protocol.gan_rounds_scan(
-                    spec, pcfg, state, data, key, n,
-                    channel=self.jax_channel, scheduler=self.jax_sched,
-                    sched_carry=sched_carry, start_round=start_round,
-                    disc_step_flops=self.disc_step_flops,
-                    gen_step_flops=self.gen_step_flops)
+    def _chunk_fn(self, n: int, eval_every: int = 0,
+                  fid_fn: Optional[Callable] = None):
+        """Jitted `rounds_scan` over a fixed chunk length n; the start
+        round is traced so one compile serves every chunk of this
+        length. State and scheduler carry are donated. With eval_every >
+        0 the (jittable) fid_fn is folded into the scan via lax.cond, so
+        FID rounds need no chunk boundary."""
+        cache_key = (n, eval_every)
+        entry = self._chunk_fns.get(cache_key)
+        # The cache holds a strong reference to the fid_fn each chunk
+        # closed over, so a different (even same-id after gc) fid_fn
+        # can never silently reuse a stale compiled closure.
+        if entry is not None and (not eval_every or entry[0] is fid_fn):
+            return entry[1]
+        spec, pcfg = self.spec, self.pcfg
+        scan = self._rounds_scan_fn()
 
-            fn = jax.jit(run_chunk, donate_argnums=(0, 1))
-            self._chunk_fns[n] = fn
+        def run_chunk(state, sched_carry, data, key, start_round):
+            eval_fn = None
+            if eval_every:
+                eval_fn = lambda gen, t: fid_fn(
+                    gen, jax.random.fold_in(key, 10_000 + t))
+            return scan(
+                spec, pcfg, state, data, key, n,
+                channel=self.jax_channel, scheduler=self.jax_sched,
+                sched_carry=sched_carry, start_round=start_round,
+                disc_step_flops=self.disc_step_flops,
+                gen_step_flops=self.gen_step_flops,
+                uplink_bits=self._uplink_bits,
+                eval_fn=eval_fn, eval_every=eval_every)
+
+        fn = jax.jit(run_chunk, donate_argnums=(0, 1))
+        self._chunk_fns[cache_key] = (fid_fn if eval_every else None, fn)
         return fn
+
+    def _fid_jittable(self, fid_fn) -> bool:
+        """True when fid_fn traces (pure jnp), so it can run in-scan;
+        numpy-based fid_fns fall back to eval-boundary chunking."""
+        try:
+            jax.eval_shape(fid_fn, self.state["gen"], self.key)
+            return True
+        except Exception:
+            return False
 
     def _eval_boundaries(self, n_rounds: int, eval_every: int,
                         have_fid: bool):
-        """Chunk lengths whose boundaries land on the FID-eval rounds."""
+        """Chunk lengths whose boundaries land on the FID-eval rounds
+        (host-eval fallback for non-jittable fid_fns)."""
         if not (have_fid and eval_every):
             return [n_rounds] if n_rounds else []
         chunks, done = [], 0
@@ -158,20 +207,36 @@ class Trainer:
 
     def _run_fused(self, n_rounds: int, *, eval_every: int,
                    fid_fn: Optional[Callable], verbose: bool):
-        for chunk in self._eval_boundaries(n_rounds, eval_every,
-                                           fid_fn is not None):
+        in_scan_fid = bool(fid_fn is not None and eval_every
+                           and self._fid_jittable(fid_fn))
+        if in_scan_fid:
+            chunks = [n_rounds] if n_rounds else []
+        else:
+            chunks = self._eval_boundaries(n_rounds, eval_every,
+                                           fid_fn is not None)
+        for chunk in chunks:
             start = self._round_index
-            self.state, self._sched_carry, out = self._chunk_fn(chunk)(
+            fn = self._chunk_fn(chunk, eval_every if in_scan_fid else 0,
+                                fid_fn if in_scan_fid else None)
+            self.state, self._sched_carry, out = fn(
                 self.state, self._sched_carry, self.data, self.key,
                 jnp.int32(start))
             metrics = {k: np.asarray(v) for k, v in out["metrics"].items()}
             walls = np.asarray(out["wallclock_s"])
             masks = np.asarray(out["mask"])
+            fids = np.asarray(out["fid"]) if "fid" in out else None
+            fid_evals = (np.asarray(out["fid_eval"])
+                         if "fid_eval" in out else None)
             for i in range(chunk):
                 t = start + i
                 self._clock += float(walls[i])
                 fid = None
-                if (fid_fn is not None and eval_every
+                if fids is not None:
+                    # explicit eval mask: a NaN FID on an eval round is
+                    # reported as NaN, exactly like the host loop
+                    if fid_evals[i]:
+                        fid = float(fids[i])
+                elif (fid_fn is not None and eval_every
                         and (t + 1) % eval_every == 0):
                     fid = float(fid_fn(self.state["gen"],
                                        jax.random.fold_in(self.key,
@@ -203,7 +268,8 @@ class Trainer:
                 disc_step_flops=self.disc_step_flops,
                 gen_step_flops=self.gen_step_flops,
                 n_d=self.pcfg.n_d, n_g=self.pcfg.n_g,
-                fedgan=self.algorithm == "fedgan")
+                fedgan=self.algorithm == "fedgan",
+                uplink_bits=self._uplink_bits)
             active = mask & ~timing.stragglers
             weights = jnp.asarray(
                 np.where(active, float(self.pcfg.sample_size), 0.0),

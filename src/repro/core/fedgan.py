@@ -6,16 +6,25 @@ generator descent step on local data); the server only averages the two
 parameter sets. Compared with the proposed framework, each device does
 ~2x the computation per round and uploads ~2x the bytes (theta AND phi)
 — the communication/computation asymmetry that Fig. 5 measures.
+
+`fedgan_rounds_scan` runs R FedGAN rounds per XLA dispatch through the
+same unified engine (`protocol.rounds_scan`) as the proposed protocol:
+scheduling, channel timing with the FedGAN wallclock composition, the
+quantized two-net uplink, and optional in-scan FID are all one
+`lax.scan`. The per-round host loop in `core.engine` stays the oracle.
 """
 from __future__ import annotations
+
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ProtocolConfig
-from repro.core import losses
+from repro.core import losses, quantize
 from repro.core.averaging import weighted_average, broadcast_like
-from repro.core.protocol import GanModelSpec, _SALT_SHARED_Z, _SALT_DATA
+from repro.core.protocol import (GanModelSpec, rounds_scan,
+                                 _SALT_SHARED_Z, _SALT_DATA)
 from repro.optim import make_optimizer, apply_updates
 
 
@@ -81,11 +90,42 @@ def fedgan_round(spec: GanModelSpec, pcfg: ProtocolConfig, state,
         gen_stacked, disc_stacked, state["gen_opt"], state["disc_opt"],
         data_stacked, jnp.arange(n_devices))
 
+    # FedGAN uploads BOTH nets in one payload — quantized as a single
+    # tree per device (one stochastic-rounding draw per upload), keyed
+    # from round_key alone so the host oracle and the fused engine
+    # quantize bitwise-identically.
+    payload = quantize.roundtrip_stacked(
+        round_key, {"gen": new_gens, "disc": new_discs},
+        pcfg.quantize_bits)
+    new_gens, new_discs = payload["gen"], payload["disc"]
+
     gen_avg = weighted_average(new_gens, weights)
     disc_avg = weighted_average(new_discs, weights)
     new_state = {"gen": gen_avg, "disc": disc_avg,
                  "gen_opt": new_gen_opt, "disc_opt": new_disc_opt}
     return new_state, {"participation": (weights > 0).astype(jnp.float32).mean()}
+
+
+def fedgan_rounds_scan(spec: GanModelSpec, pcfg: ProtocolConfig, state,
+                       data_stacked, key, n_rounds: int, *,
+                       channel, scheduler, sched_carry=None, start_round=0,
+                       disc_step_flops: float = 1e9,
+                       gen_step_flops: float = 1e9,
+                       uplink_bits: Optional[int] = None,
+                       eval_fn: Optional[Callable] = None,
+                       eval_every: int = 0):
+    """R fused FedGAN rounds (see `protocol.rounds_scan`): the baseline
+    gets the same one-dispatch-per-chunk engine as the proposed
+    protocol, with `fedgan=True` selecting the two-net upload payload
+    and the Fig. 5 wallclock composition."""
+    round_fn = lambda st, d, w, k: fedgan_round(spec, pcfg, st, d, w, k)
+    return rounds_scan(round_fn, pcfg, state, data_stacked, key, n_rounds,
+                       channel=channel, scheduler=scheduler,
+                       sched_carry=sched_carry, start_round=start_round,
+                       disc_step_flops=disc_step_flops,
+                       gen_step_flops=gen_step_flops, fedgan=True,
+                       uplink_bits=uplink_bits, eval_fn=eval_fn,
+                       eval_every=eval_every)
 
 
 def make_fedgan_state(key, init_fn, pcfg: ProtocolConfig, n_devices: int):

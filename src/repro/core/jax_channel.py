@@ -65,14 +65,17 @@ class JaxChannel:
     # ------------------------------------------------------------------
     def round_timing(self, key, mask, *, disc_params: int, gen_params: int,
                      disc_step_flops: float, gen_step_flops: float,
-                     n_d: int, n_g: int,
-                     fedgan: bool = False) -> JaxRoundTiming:
+                     n_d: int, n_g: int, fedgan: bool = False,
+                     uplink_bits: float | None = None) -> JaxRoundTiming:
         """Wall-clock pieces of one communication round (fresh fading
-        draw, mirroring the numpy twin's second `uplink_rates` call)."""
+        draw, mirroring the numpy twin's second `uplink_rates` call).
+        `uplink_bits` overrides the per-device upload payload exactly as
+        in the numpy twin."""
         cfg = self.cfg
         rates = self.uplink_rates(key, jnp.sum(mask))
-        up_bits = cfg.bits_per_param * (
-            disc_params + gen_params if fedgan else disc_params)
+        up_bits = uplink_bits if uplink_bits is not None else (
+            cfg.bits_per_param * (
+                disc_params + gen_params if fedgan else disc_params))
         upload = jnp.where(mask, up_bits / jnp.maximum(rates, 1.0), 0.0)
         dev_flops = n_d * disc_step_flops + (
             n_g * gen_step_flops if fedgan else 0.0)

@@ -23,16 +23,20 @@ The model is abstracted by `GanModelSpec`, so DCGAN (the paper's
 experiment) and every assigned backbone-GAN use one protocol
 implementation.
 
-FUSED MULTI-ROUND DRIVER: `gan_rounds_scan` folds R complete rounds —
-Step 1 scheduling (core.jax_scheduling), channel timing + straggler
-exclusion (core.jax_channel), the `gan_round` model math, and the
+FUSED MULTI-ROUND ENGINE: `rounds_scan` folds R complete rounds of ANY
+round function — Step 1 scheduling (core.jax_scheduling), channel
+timing + straggler exclusion (core.jax_channel) with the actual
+quantized payload size, the round's model math (with the Step 3
+quantized uplink inside), optional IN-SCAN FID via `lax.cond`, and the
 Fig. 1/Fig. 2 wall-clock composition — into a single `lax.scan`, so one
 XLA dispatch advances R communication rounds and returns stacked
-per-round metrics/wallclock/masks. The host-side per-round loop in
-`core.engine.Trainer(driver="host")` is retained as the equivalence
-ORACLE: for deterministic schedulers (or `fading=False`) the fused path
-must reproduce its masks bitwise and its params/metrics to float32
-round-off (tests/test_driver_equivalence.py).
+per-round metrics/wallclock/masks[/fid]. `gan_rounds_scan` instantiates
+it for the proposed protocol and `fedgan.fedgan_rounds_scan` for the
+FedGAN baseline (Fig. 5's comparison runs both fused). The host-side
+per-round loop in `core.engine.Trainer(driver="host")` is retained as
+the equivalence ORACLE: for deterministic schedulers (or
+`fading=False`) the fused path must reproduce its masks bitwise and its
+params/metrics to float32 round-off (tests/test_driver_equivalence.py).
 """
 from __future__ import annotations
 
@@ -43,7 +47,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ProtocolConfig
-from repro.core import jax_channel, jax_scheduling, losses
+from repro.core import jax_channel, jax_scheduling, losses, quantize
 from repro.core.averaging import weighted_average, broadcast_like
 from repro.optim import make_optimizer, apply_updates
 from repro.optim.optimizers import tree_add
@@ -272,6 +276,11 @@ def gan_round(spec: GanModelSpec, pcfg: ProtocolConfig, state, data_stacked,
             disc_stacked, state["disc_opt"], data_stacked,
             jnp.arange(n_devices))
 
+    # Step 3 — each device quantizes its upload (paper Section IV,
+    # 16 bits/param by default; >=32 bits is the float32 identity).
+    new_discs = quantize.roundtrip_stacked(round_key, new_discs,
+                                           pcfg.quantize_bits)
+
     # Steps 3–4 — Algorithm 2: weighted averaging (the uplink collective).
     disc_avg = weighted_average(new_discs, weights)
 
@@ -310,28 +319,55 @@ def count_params(tree) -> int:
     return sum(int(x.size) for x in jax.tree_util.tree_leaves(tree))
 
 
-def gan_rounds_scan(spec: GanModelSpec, pcfg: ProtocolConfig, state,
-                    data_stacked, key, n_rounds: int, *,
-                    channel, scheduler, sched_carry=None, start_round=0,
-                    disc_step_flops: float = 1e9,
-                    gen_step_flops: float = 1e9):
-    """R fused communication rounds in one `lax.scan`.
+def uplink_payload_bits(state, pcfg: ProtocolConfig, *,
+                        fedgan: bool = False) -> int:
+    """Per-device upload payload in bits at the protocol's quantization
+    width: phi only for the proposed framework, theta AND phi for FedGAN
+    (the communication asymmetry Fig. 5 measures)."""
+    bits = quantize.tree_bits(state["disc"], pcfg.quantize_bits)
+    if fedgan:
+        bits += quantize.tree_bits(state["gen"], pcfg.quantize_bits)
+    return bits
 
+
+def rounds_scan(round_fn, pcfg: ProtocolConfig, state, data_stacked, key,
+                n_rounds: int, *, channel, scheduler, sched_carry=None,
+                start_round=0, disc_step_flops: float = 1e9,
+                gen_step_flops: float = 1e9, fedgan: bool = False,
+                uplink_bits: Optional[int] = None,
+                eval_fn: Optional[Callable] = None, eval_every: int = 0):
+    """The UNIFIED fused round engine: R communication rounds of ANY
+    round function in one `lax.scan`.
+
+    round_fn:  (state, data_stacked, weights, round_key) -> (state,
+               metrics) — `gan_round` (via `gan_rounds_scan`) or
+               `fedgan.fedgan_round` (via `fedgan.fedgan_rounds_scan`).
     channel:   core.jax_channel.JaxChannel (static placement, jittable)
     scheduler: core.jax_scheduling.JaxScheduler (policy static)
     sched_carry: scheduler carry from a previous chunk (None = fresh)
     start_round: absolute index of the first round; round t's model key
         is `fold_in(key, t)`, matching the host loop's per-round fold so
         chunked fused runs and the host oracle see identical streams.
+    fedgan:    switches the channel's timing/wallclock composition to
+        the FedGAN round shape (local G+D compute, both nets uploaded).
+    uplink_bits: per-device upload payload in bits; None computes it
+        from the state at `pcfg.quantize_bits` (`uplink_payload_bits`),
+        so ablation bit widths shrink the simulated upload time too.
+    eval_fn:   optional JITTABLE (gen_params, t) -> scalar, evaluated
+        IN-SCAN via `lax.cond` on rounds where (t+1) % eval_every == 0;
+        out["fid"] is the per-round series (NaN placeholder on skipped
+        rounds) and out["fid_eval"] the boolean did-evaluate mask.
 
     Returns (state, sched_carry, out) where out stacks per-round
     {"metrics": {...: (R,)}, "wallclock_s": (R,), "mask": (R, K) bool,
-    "weights": (R, K)}.
+    "weights": (R, K)[, "fid": (R,), "fid_eval": (R,)]}.
     """
     if sched_carry is None:
         sched_carry = scheduler.init_carry()
     disc_nparams = count_params(state["disc"])
     gen_nparams = count_params(state["gen"])
+    if uplink_bits is None:
+        uplink_bits = uplink_payload_bits(state, pcfg, fedgan=fedgan)
 
     def body(carry, t):
         st, sc = carry
@@ -348,24 +384,56 @@ def gan_rounds_scan(spec: GanModelSpec, pcfg: ProtocolConfig, state,
         timing = channel.round_timing(
             k_timing, mask, disc_params=disc_nparams,
             gen_params=gen_nparams, disc_step_flops=disc_step_flops,
-            gen_step_flops=gen_step_flops, n_d=pcfg.n_d, n_g=pcfg.n_g)
+            gen_step_flops=gen_step_flops, n_d=pcfg.n_d, n_g=pcfg.n_g,
+            fedgan=fedgan, uplink_bits=uplink_bits)
         active = mask & ~timing.stragglers
         weights = jnp.where(active, float(pcfg.sample_size),
                             0.0).astype(jnp.float32)
 
         # Steps 2-5
-        st, metrics = gan_round(spec, pcfg, st, data_stacked, weights,
-                                round_key)
+        st, metrics = round_fn(st, data_stacked, weights, round_key)
         wall = jax_channel.round_wallclock(timing, mask,
-                                           schedule=pcfg.schedule)
+                                           schedule=pcfg.schedule,
+                                           fedgan=fedgan)
         out = {"metrics": metrics, "wallclock_s": wall, "mask": mask,
                "weights": weights}
+        if eval_fn is not None and eval_every > 0:
+            # In-scan eval: lax.cond skips the branch on non-eval rounds
+            # at runtime, so eval cost is paid only every eval_every
+            # rounds while the chunk stays ONE compiled function. The
+            # explicit eval mask (not a NaN sentinel) keeps a genuinely
+            # NaN metric on an eval round distinguishable from "no eval".
+            do_eval = (t + 1) % eval_every == 0
+            out["fid"] = jax.lax.cond(
+                do_eval,
+                lambda g: jnp.float32(eval_fn(g, t)),
+                lambda g: jnp.float32(jnp.nan), st["gen"])
+            out["fid_eval"] = do_eval
         return (st, sc), out
 
     rounds = jnp.asarray(start_round) + jnp.arange(n_rounds)
     (state, sched_carry), out = jax.lax.scan(body, (state, sched_carry),
                                              rounds)
     return state, sched_carry, out
+
+
+def gan_rounds_scan(spec: GanModelSpec, pcfg: ProtocolConfig, state,
+                    data_stacked, key, n_rounds: int, *,
+                    channel, scheduler, sched_carry=None, start_round=0,
+                    disc_step_flops: float = 1e9,
+                    gen_step_flops: float = 1e9,
+                    uplink_bits: Optional[int] = None,
+                    eval_fn: Optional[Callable] = None,
+                    eval_every: int = 0):
+    """R fused rounds of the PROPOSED protocol (see `rounds_scan`)."""
+    round_fn = lambda st, d, w, k: gan_round(spec, pcfg, st, d, w, k)
+    return rounds_scan(round_fn, pcfg, state, data_stacked, key, n_rounds,
+                       channel=channel, scheduler=scheduler,
+                       sched_carry=sched_carry, start_round=start_round,
+                       disc_step_flops=disc_step_flops,
+                       gen_step_flops=gen_step_flops, fedgan=False,
+                       uplink_bits=uplink_bits, eval_fn=eval_fn,
+                       eval_every=eval_every)
 
 
 def centralized_step(spec: GanModelSpec, pcfg: ProtocolConfig, state, data,

@@ -4,26 +4,48 @@ Uniform stochastic quantization with a per-tensor scale. With the
 default 16 bits the quantization error is negligible (matching the
 paper's implicit assumption); lower bit widths are exposed for
 communication-efficiency ablations.
+
+Since PR 2 the uplink is quantized INSIDE the round math
+(`protocol.gan_round` Step 3, `fedgan.fedgan_round`), so both drivers
+— the per-round host oracle and the fused `lax.scan` engine — and the
+shard_map path apply bitwise-identical quantization: device k's
+round-t draw is keyed by fold_in(fold_in(round_key, _SALT_QUANT), k),
+independent of how the device axis is executed (vmap, scan, or a mesh
+slice). `tree_bits` also feeds the channel's uplink payload-size
+timing, so ablation bit widths shrink simulated upload time too.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+# Salt separating the quantization stream from the shared-noise /
+# data-sampling streams of core.protocol.
+_SALT_QUANT = 0x0b175
+
 
 def quantize_tree(key, tree, bits: int = 16):
-    """Returns (quantized_int_tree, scales_tree)."""
+    """Returns (quantized_int_tree, scales_tree).
+
+    The stochastic-rounding randomness is ONE uniform draw over the
+    whole flattened payload, sliced per leaf — an order of magnitude
+    fewer threefry dispatches than per-leaf keys at typical leaf
+    counts, which matters inside the fused driver's per-round scan.
+    """
     levels = 2 ** (bits - 1) - 1
     leaves, treedef = jax.tree_util.tree_flatten(tree)
-    keys = jax.random.split(key, len(leaves))
+    sizes = [int(x.size) for x in leaves]
+    rnd_flat = jax.random.uniform(key, (sum(sizes),))
 
     q_leaves, scales = [], []
-    for k, x in zip(keys, leaves):
+    off = 0
+    for x, size in zip(leaves, sizes):
+        rnd = rnd_flat[off:off + size].reshape(x.shape)
+        off += size
         scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / levels
         scaled = x / scale
         low = jnp.floor(scaled)
         p_up = scaled - low
-        rnd = jax.random.uniform(k, x.shape)
         q = low + (rnd < p_up)
         q_leaves.append(jnp.clip(q, -levels - 1, levels).astype(jnp.int32))
         scales.append(scale)
@@ -43,6 +65,29 @@ def roundtrip(key, tree, bits: int = 16):
     q, s = quantize_tree(key, tree, bits)
     deq = dequantize_tree(q, s)
     return jax.tree.map(lambda d, x: d.astype(x.dtype), deq, tree)
+
+
+def device_uplink_key(round_key, dev_index):
+    """Key for device `dev_index`'s uplink quantization this round.
+
+    One definition shared by every execution layout of the device axis
+    (vmap in `gan_round`, per-slice in `shard_round`), so they quantize
+    bitwise-identically.
+    """
+    return jax.random.fold_in(jax.random.fold_in(round_key, _SALT_QUANT),
+                              dev_index)
+
+
+def roundtrip_stacked(round_key, stacked_tree, bits: int = 16):
+    """Per-device quantize-dequantize of a pytree with leading axis K
+    (Step 3: every scheduled device quantizes its OWN upload with its
+    own stream)."""
+    if bits >= 32:
+        return stacked_tree
+    n_devices = jax.tree_util.tree_leaves(stacked_tree)[0].shape[0]
+    keys = jax.vmap(lambda i: device_uplink_key(round_key, i))(
+        jnp.arange(n_devices))
+    return jax.vmap(lambda k, t: roundtrip(k, t, bits))(keys, stacked_tree)
 
 
 def tree_bits(tree, bits: int = 16) -> int:

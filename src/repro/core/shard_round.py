@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ProtocolConfig
+from repro.core import quantize
 from repro.core.protocol import GanModelSpec, device_update, server_update
 from repro.core.averaging import weighted_average_psum
 
@@ -57,6 +58,14 @@ def shard_map_round(spec: GanModelSpec, pcfg: ProtocolConfig, mesh,
         disc_k, disc_opt_k, disc_obj = device_update(
             spec, pcfg, state["gen"], state["disc"], disc_opt_k, data_k,
             round_key, my_index)
+
+        # Step 3 — quantized uplink, keyed exactly as the vmap path's
+        # `roundtrip_stacked` (device index = this slice's axis index),
+        # so both layouts quantize bitwise-identically.
+        if pcfg.quantize_bits < 32:
+            disc_k = quantize.roundtrip(
+                quantize.device_uplink_key(round_key, my_index), disc_k,
+                pcfg.quantize_bits)
 
         # Algorithm 2 as an explicit weighted psum over the device axes.
         disc_avg = weighted_average_psum(disc_k, w_k, axis_names=axis)

@@ -84,6 +84,13 @@ def build_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
     fuse_rounds > 1 wraps the round body in a `lax.scan` over
     consecutive seeds (the fused-driver pattern of core.engine), so one
     dispatch advances `fuse_rounds` rounds and returns stacked metrics.
+
+    The round applies the paper's quantized uplink per device
+    (pcfg.quantize_bits, default 16) inside `gan_round`; override with
+    pcfg_overrides={"quantize_bits": ...} (>= 32 disables it). Under
+    GSPMD the per-device quantization stays embarrassingly parallel —
+    per-leaf scale reduction and stochastic rounding are local to each
+    device slice.
     """
     plan = rules.plan_for(cfg, mesh_cfg)
     k_dev = math.prod(mesh.shape[a] for a in plan.dev_axes)

@@ -41,6 +41,9 @@ def main():
     ap.add_argument("--fuse-rounds", type=int, default=1,
                     help="rounds fused per XLA dispatch (lax.scan); 1 = "
                          "host loop, >1 = the compiled multi-round driver")
+    ap.add_argument("--quantize-bits", type=int, default=16,
+                    help="uplink quantization width (paper: 16; >=32 "
+                         "disables quantization)")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--distributed", action="store_true",
                     help="multi-host TPU: call jax.distributed.initialize")
@@ -61,7 +64,8 @@ def main():
     shape = ShapeConfig("train_cli", args.seq_len, args.batch, "train")
     step, abstract_args = steps_mod.build_train_step(
         cfg, shape, mesh, mesh_cfg, schedule=args.schedule,
-        fuse_rounds=fuse)
+        fuse_rounds=fuse,
+        pcfg_overrides={"quantize_bits": args.quantize_bits})
 
     # materialize real inputs matching the abstract specs
     k_dev = args.data_dim

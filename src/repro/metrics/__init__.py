@@ -1,1 +1,4 @@
-from repro.metrics.fid import fid_score, feature_stats, make_feature_extractor
+from repro.metrics.fid import (fid_score, feature_stats,
+                               frechet_distance, make_feature_extractor,
+                               fid_score_jnp, feature_stats_jnp,
+                               frechet_distance_jnp)

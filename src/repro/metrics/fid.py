@@ -12,6 +12,22 @@ features preserve distributional distances well enough for the paper's
 *relative* comparisons (schedule vs schedule, proposed vs FedGAN), which
 is what EXPERIMENTS.md validates. This substitution is recorded in
 DESIGN.md.
+
+IN-SCAN FID (PR 2 design note): the formula has a second, pure-jnp
+implementation (`feature_stats_jnp` / `frechet_distance_jnp`, float32,
+eigh-based like the numpy path) so a jittable fid_fn can run INSIDE the
+fused driver's `lax.scan` via `lax.cond` on eval rounds. Per-round
+`lax.cond` beats the old eval-boundary chunking because (a) the chunk
+length no longer depends on `eval_every` alignment, so ONE compiled
+chunk function serves the whole run instead of one compile per distinct
+boundary-to-boundary length; (b) train state never leaves the device
+between rounds, so buffer donation holds across the entire run rather
+than being broken at every eval boundary; (c) `lax.cond` skips the eval
+branch at runtime on non-eval rounds, so the amortized cost is
+identical. Non-jittable fid_fns (e.g. the numpy path here) still work —
+`core.engine` falls back to chunk-boundary host evaluation. The numpy
+implementation stays the parity oracle (tests/test_fid_parity.py,
+float64, agreement to ~1e-5 relative).
 """
 from __future__ import annotations
 
@@ -92,3 +108,43 @@ def fid_score(real_feats, fake_feats) -> float:
     mu1, c1 = feature_stats(real_feats)
     mu2, c2 = feature_stats(fake_feats)
     return frechet_distance(mu1, c1, mu2, c2)
+
+
+# ---------------------------------------------------------------------------
+# Pure-jnp twin — jittable, so FID can run inside the fused driver's scan
+# ---------------------------------------------------------------------------
+
+def feature_stats_jnp(feats):
+    """jnp twin of `feature_stats`: (mu, cov) with np.cov's ddof=1."""
+    f = jnp.asarray(feats, jnp.float32)
+    mu = f.mean(0)
+    d = f - mu
+    cov = d.T @ d / jnp.float32(max(f.shape[0] - 1, 1))
+    return mu, jnp.atleast_2d(cov)
+
+
+def _sqrtm_psd_jnp(mat):
+    vals, vecs = jnp.linalg.eigh(mat)
+    vals = jnp.clip(vals, 0.0, None)
+    return (vecs * jnp.sqrt(vals)) @ vecs.T
+
+
+def frechet_distance_jnp(mu1, cov1, mu2, cov2):
+    """jnp twin of `frechet_distance`; float32 scalar, jittable."""
+    s1_half = _sqrtm_psd_jnp(jnp.asarray(cov1, jnp.float32))
+    cov2 = jnp.asarray(cov2, jnp.float32)
+    inner = _sqrtm_psd_jnp(s1_half @ cov2 @ s1_half)
+    mu1 = jnp.asarray(mu1, jnp.float32)
+    mu2 = jnp.asarray(mu2, jnp.float32)
+    d2 = (jnp.sum((mu1 - mu2) ** 2)
+          + jnp.trace(jnp.asarray(cov1, jnp.float32) + cov2 - 2.0 * inner))
+    return jnp.maximum(d2, 0.0)
+
+
+def fid_score_jnp(real_feats, fake_feats):
+    """Jittable FID — use this (or any traceable fid_fn) to get in-scan
+    evaluation from the fused driver; the numpy `fid_score` stays the
+    float64 oracle."""
+    mu1, c1 = feature_stats_jnp(real_feats)
+    mu2, c2 = feature_stats_jnp(fake_feats)
+    return frechet_distance_jnp(mu1, c1, mu2, c2)

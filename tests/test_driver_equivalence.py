@@ -2,11 +2,17 @@
 reproduce the per-round host loop, and the pure-JAX scheduler/channel
 twins must agree with their numpy oracles.
 
-Contract (see core/engine.py, core/protocol.py docstrings):
+Contract (see core/engine.py, core/protocol.py docstrings), for BOTH
+the proposed protocol and FedGAN (the unified engine):
   * params/metrics: float32 round-off agreement, any scheduler
   * scheduler masks: BITWISE agreement for deterministic policies
   * wallclock: float32 round-off agreement when fading=False (with
     fading the streams differ, distribution-level only)
+  * the quantized uplink (bits < 32) draws per-device streams from the
+    round key alone, so both drivers quantize bitwise-identically
+
+The full FedGAN matrix (schedules x fading x bits) is `slow`-marked and
+runs in CI's slow lane; one representative combo stays in the fast lane.
 """
 import jax
 import jax.numpy as jnp
@@ -32,15 +38,15 @@ K = 4
 DATA = jax.random.normal(jax.random.PRNGKey(9), (K, 8, 8, 8, 1))
 
 
-def make_trainer(driver, *, schedule="serial", scheduler="all", ratio=1.0,
-                 channel_kw=None):
+def make_trainer(driver, *, algorithm="proposed", schedule="serial",
+                 scheduler="all", ratio=1.0, bits=16, channel_kw=None):
     pcfg = ProtocolConfig(n_devices=K, n_d=1, n_g=1, sample_size=4,
                           server_sample_size=4, lr_d=1e-3, lr_g=1e-3,
                           schedule=schedule, scheduler=scheduler,
-                          scheduling_ratio=ratio)
+                          scheduling_ratio=ratio, quantize_bits=bits)
     chan = ChannelConfig(n_devices=K, seed=3, **(channel_kw or {}))
     return Trainer(SPEC, pcfg, lambda k: dcgan.gan_init(k, CFG), DATA, KEY,
-                   channel_cfg=chan, driver=driver)
+                   channel_cfg=chan, driver=driver, algorithm=algorithm)
 
 
 def assert_trees_close(a, b, atol=2e-5):
@@ -111,6 +117,83 @@ class TestFusedVsHostLoop:
         assert_histories_match(h, f, wallclock=True)
         assert all(r.metrics["participation"] == 0.0 for r in f)
         assert_trees_close(th.state, tf.state)
+
+
+class TestFedganFusedVsHost:
+    """The FedGAN baseline gets the SAME pinning the proposed protocol
+    has: bitwise masks, float32-tolerance params/metrics, wallclock
+    parity with fading off — across schedules, fading, and uplink
+    quantization widths."""
+
+    def _run_pair(self, *, schedule, fading, bits, rounds=4):
+        kw = dict(algorithm="fedgan", schedule=schedule, bits=bits,
+                  scheduler="round_robin", ratio=0.5,
+                  channel_kw={"fading": fading})
+        th = make_trainer("host", **kw)
+        tf = make_trainer("fused", **kw)
+        h, f = th.run(rounds), tf.run(rounds)
+        assert_trees_close(th.state, tf.state)
+        assert_histories_match(h, f, wallclock=not fading)
+        return th, tf
+
+    def test_fedgan_fused_matches_host_fast_lane(self):
+        """Fast-lane representative of the matrix below."""
+        self._run_pair(schedule="serial", fading=False, bits=16)
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("schedule", ["serial", "parallel"])
+    @pytest.mark.parametrize("fading", [False, True])
+    @pytest.mark.parametrize("bits", [16, 32])
+    def test_fedgan_fused_matches_host_matrix(self, schedule, fading,
+                                              bits):
+        self._run_pair(schedule=schedule, fading=fading, bits=bits)
+
+    def test_fedgan_quantized_uplink_actually_quantizes(self):
+        """bits=8 must change the trajectory vs bits=32 (the uplink is
+        exercised, not a no-op) while both drivers still agree."""
+        t8 = make_trainer("fused", algorithm="fedgan", bits=8,
+                          channel_kw={"fading": False})
+        t32 = make_trainer("fused", algorithm="fedgan", bits=32,
+                           channel_kw={"fading": False})
+        t8.run(2), t32.run(2)
+        l8 = jax.tree_util.tree_leaves(t8.state["disc"])
+        l32 = jax.tree_util.tree_leaves(t32.state["disc"])
+        assert any(float(jnp.abs(a - b).max()) > 1e-7
+                   for a, b in zip(l8, l32))
+
+    def test_fedgan_uplink_payload_drives_timing(self):
+        """FedGAN's two-net upload must cost more upload time than the
+        proposed one-net upload on the same channel, and lower bit
+        widths must shrink it."""
+        wall = {}
+        for alg, bits in (("fedgan", 16), ("fedgan", 8), ("proposed", 16)):
+            tr = make_trainer("fused", algorithm=alg, bits=bits,
+                              channel_kw={"fading": False})
+            wall[alg, bits] = tr.run(1)[0].wallclock_s
+        assert wall["fedgan", 16] > wall["proposed", 16]
+        assert wall["fedgan", 8] < wall["fedgan", 16]
+
+
+class TestDriverSelection:
+    """Regression for the silent driver coercion fixed in PR 2:
+    requesting the fused driver for an unsupported algorithm raises."""
+
+    def test_fused_centralized_raises(self):
+        with pytest.raises(ValueError, match="fused"):
+            make_trainer("fused", algorithm="centralized")
+
+    def test_auto_resolves_per_algorithm(self):
+        assert make_trainer("auto").driver == "fused"
+        assert make_trainer("auto", algorithm="fedgan").driver == "fused"
+        assert make_trainer("auto",
+                            algorithm="centralized").driver == "host"
+
+    def test_explicit_host_always_allowed(self):
+        assert make_trainer("host", algorithm="centralized").driver == "host"
+
+    def test_unknown_driver_raises(self):
+        with pytest.raises(ValueError):
+            make_trainer("warp")
 
 
 class TestSchedulerTwinParity:

@@ -120,8 +120,10 @@ class TestRound:
         leaves_close(s1["gen"], s2["gen"])
 
     def test_centralized_equals_k1_round(self):
+        # quantize_bits=32: centralized training has no uplink, so the
+        # K=1 round must run with the float32-identity uplink to match.
         pcfg = ProtocolConfig(n_devices=1, n_d=2, n_g=2, sample_size=4,
-                              server_sample_size=4)
+                              server_sample_size=4, quantize_bits=32)
         state = make_state(pcfg, 1)
         data = make_data(1)
         s_round, _ = protocol.gan_round(SPEC, pcfg, state, data,

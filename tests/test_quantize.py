@@ -1,0 +1,178 @@
+"""Uplink quantization invariants (core/quantize.py).
+
+Property-based tests run when `hypothesis` (a dev-only extra,
+requirements-dev.txt) is importable — guarded like tests/test_property.py
+so the tier-1 suite stays green without it. The same check functions are
+exercised unconditionally by seeded twins, so the invariants are pinned
+in every environment.
+"""
+import pytest
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quantize
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+KEY = jax.random.PRNGKey(0)
+
+
+def make_tree(seed: int, n: int = 256):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": jnp.asarray(rng.standard_normal((n // 16, 16)), jnp.float32),
+        "b": jnp.asarray(rng.uniform(-3.0, 3.0, n), jnp.float32),
+        "nested": [jnp.asarray(rng.standard_normal(7), jnp.float32)],
+    }
+
+
+def levels(bits: int) -> int:
+    return 2 ** (bits - 1) - 1
+
+
+# ---------------------------------------------------------------------------
+# Shared checks (called by both the hypothesis and the seeded tests)
+# ---------------------------------------------------------------------------
+
+def check_identity_at_32_bits(tree, bits):
+    out = quantize.roundtrip(KEY, tree, bits=bits)
+    for a, b in zip(jax.tree_util.tree_leaves(out),
+                    jax.tree_util.tree_leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def check_error_bound_per_leaf(key, tree, bits):
+    """|roundtrip(x) - x| <= max|x| / (2^(bits-1) - 1) per leaf (the
+    per-tensor scale; stochastic rounding moves at most one level)."""
+    out = quantize.roundtrip(key, tree, bits=bits)
+    for a, b in zip(jax.tree_util.tree_leaves(out),
+                    jax.tree_util.tree_leaves(tree)):
+        scale = float(jnp.max(jnp.abs(b))) / levels(bits)
+        err = float(jnp.max(jnp.abs(a - b)))
+        assert err <= scale * (1 + 1e-5) + 1e-7, (bits, err, scale)
+
+
+def check_error_shrinks_with_bits(key, tree, bits_lo, bits_hi):
+    """Mean |error| strictly shrinks as bits grow (scale shrinks 4x per
+    +2 bits, so the means are far separated over >=256 elements)."""
+    def mean_err(bits):
+        out = quantize.roundtrip(key, tree, bits=bits)
+        errs = [jnp.abs(a - b).mean()
+                for a, b in zip(jax.tree_util.tree_leaves(out),
+                                jax.tree_util.tree_leaves(tree))]
+        return float(sum(errs) / len(errs))
+
+    assert mean_err(bits_hi) < mean_err(bits_lo), (bits_lo, bits_hi)
+
+
+def check_structure_preserved(key, tree, bits):
+    out = quantize.roundtrip(key, tree, bits=bits)
+    assert (jax.tree_util.tree_structure(out)
+            == jax.tree_util.tree_structure(tree))
+    for a, b in zip(jax.tree_util.tree_leaves(out),
+                    jax.tree_util.tree_leaves(tree)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+
+
+def check_tree_bits_exact(tree, bits):
+    total = sum(int(x.size) for x in jax.tree_util.tree_leaves(tree))
+    assert quantize.tree_bits(tree, bits) == bits * total
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis property tests (CI / dev environments)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    SETTINGS = dict(max_examples=25, deadline=None)
+
+    @settings(**SETTINGS)
+    @given(bits=st.integers(32, 64), seed=st.integers(0, 2 ** 16))
+    def test_prop_bits_ge_32_is_identity(bits, seed):
+        check_identity_at_32_bits(make_tree(seed), bits)
+
+    @settings(**SETTINGS)
+    @given(bits=st.integers(2, 16), seed=st.integers(0, 2 ** 16))
+    def test_prop_error_bounded_by_scale(bits, seed):
+        check_error_bound_per_leaf(jax.random.PRNGKey(seed),
+                                   make_tree(seed), bits)
+
+    @settings(**SETTINGS)
+    @given(bits_lo=st.integers(3, 10), step=st.integers(2, 6),
+           seed=st.integers(0, 2 ** 16))
+    def test_prop_error_monotone_in_bits(bits_lo, step, seed):
+        check_error_shrinks_with_bits(jax.random.PRNGKey(seed),
+                                      make_tree(seed, n=512),
+                                      bits_lo, bits_lo + step)
+
+    @settings(**SETTINGS)
+    @given(bits=st.integers(2, 31), seed=st.integers(0, 2 ** 16))
+    def test_prop_dtype_and_treedef_preserved(bits, seed):
+        check_structure_preserved(jax.random.PRNGKey(seed),
+                                  make_tree(seed), bits)
+
+    @settings(**SETTINGS)
+    @given(bits=st.integers(1, 64), seed=st.integers(0, 2 ** 16))
+    def test_prop_tree_bits_counts_exactly(bits, seed):
+        check_tree_bits_exact(make_tree(seed), bits)
+
+
+# ---------------------------------------------------------------------------
+# Seeded twins (always run)
+# ---------------------------------------------------------------------------
+
+class TestQuantizeSeeded:
+    @pytest.mark.parametrize("bits", [32, 48])
+    def test_bits_ge_32_is_identity(self, bits):
+        check_identity_at_32_bits(make_tree(0), bits)
+
+    @pytest.mark.parametrize("bits", [4, 8, 16])
+    def test_error_bounded_by_scale(self, bits):
+        for seed in range(5):
+            check_error_bound_per_leaf(jax.random.PRNGKey(seed),
+                                       make_tree(seed), bits)
+
+    def test_error_monotone_in_bits(self):
+        for seed in range(5):
+            for lo, hi in ((4, 6), (6, 8), (8, 12)):
+                check_error_shrinks_with_bits(jax.random.PRNGKey(seed),
+                                              make_tree(seed, n=512),
+                                              lo, hi)
+
+    @pytest.mark.parametrize("bits", [5, 16])
+    def test_dtype_and_treedef_preserved(self, bits):
+        check_structure_preserved(KEY, make_tree(1), bits)
+
+    @pytest.mark.parametrize("bits", [1, 8, 16, 32])
+    def test_tree_bits_counts_exactly(self, bits):
+        check_tree_bits_exact(make_tree(2), bits)
+
+    def test_quantize_tree_int_levels_in_range(self):
+        tree = make_tree(3)
+        q, scales = quantize.quantize_tree(KEY, tree, bits=8)
+        for leaf in jax.tree_util.tree_leaves(q):
+            assert leaf.dtype == jnp.int32
+            assert int(leaf.max()) <= levels(8)
+            assert int(leaf.min()) >= -levels(8) - 1
+
+    def test_roundtrip_stacked_matches_per_device_roundtrip(self):
+        """The vmapped stacked uplink must equal per-device roundtrips
+        with `device_uplink_key` — the contract that makes the vmap,
+        scan, and shard_map layouts quantize identically."""
+        k_dev, bits = 3, 8
+        rng = np.random.default_rng(7)
+        stacked = {"w": jnp.asarray(
+            rng.standard_normal((k_dev, 5, 4)), jnp.float32)}
+        out = quantize.roundtrip_stacked(KEY, stacked, bits)
+        for i in range(k_dev):
+            ref = quantize.roundtrip(
+                quantize.device_uplink_key(KEY, i),
+                {"w": stacked["w"][i]}, bits)
+            np.testing.assert_array_equal(np.asarray(out["w"][i]),
+                                          np.asarray(ref["w"]))
