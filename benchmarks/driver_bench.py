@@ -1,27 +1,40 @@
-"""Driver microbenchmark: rounds/sec of the per-round host loop vs the
-fused multi-round `rounds_scan` engine, for BOTH fused algorithms
-(the proposed protocol and the FedGAN baseline), at K=8 devices and
-the paper-default 16-bit quantized uplink.
+"""Driver microbenchmark: rounds/sec of per-round dispatch vs the fused
+multi-round engine, on BOTH execution layouts, at K=8 devices and the
+paper-default 16-bit quantized uplink.
 
-The fused driver's win is everything the host loop pays per round —
-dispatch latency, weight/metrics host sync, numpy scheduling — so the
-bench runs a deliberately tiny MLP-GAN: the round's FLOPs are
-negligible and both drivers are measured in the dispatch-bound regime
-the fused engine targets (at real model scale the same savings apply
-per round, they are just a smaller fraction of the round). Acceptance
-target: >= 2x rounds/sec over the host loop on CPU for each algorithm.
+  --layout stacked (default): the per-round host loop vs the fused
+      `protocol.rounds_scan`, for both fused algorithms (proposed +
+      FedGAN). Runs on a single device.
+  --layout mesh: the per-round `shard_map_round` dispatch (host
+      scheduling, one XLA dispatch per round) vs the fused
+      `shard_round.shard_rounds_scan` (R rounds inside ONE shard_map
+      dispatch). Requires >= K addressable devices, e.g.
+      XLA_FLAGS=--xla_force_host_platform_device_count=8.
 
-    PYTHONPATH=src python benchmarks/driver_bench.py            # full
-    PYTHONPATH=src python benchmarks/driver_bench.py --smoke    # CI lane
+The fused driver's win is everything per-round dispatch pays — dispatch
+latency, weight/metrics host sync, numpy scheduling — so the bench runs
+a deliberately tiny MLP-GAN: the round's FLOPs are negligible and both
+drivers are measured in the dispatch-bound regime the fused engine
+targets (at real model scale the same savings apply per round, they are
+just a smaller fraction of the round). Acceptance target: >= 2x
+rounds/sec over per-round dispatch for each measured pair.
 
-`--smoke` shrinks the measurement and exits non-zero if either fused
-path regresses below the host loop (threshold 1.2x, conservative
+    PYTHONPATH=src python benchmarks/driver_bench.py              # full
+    PYTHONPATH=src python benchmarks/driver_bench.py --smoke      # CI
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python benchmarks/driver_bench.py --smoke --layout mesh
+
+Every run merges its rounds/sec numbers into BENCH_driver.json (keyed
+per layout), so CI artifacts record both layouts side by side.
+`--smoke` shrinks the measurement and exits non-zero if a fused path
+regresses below per-round dispatch (threshold 1.2x, conservative
 against CI-runner noise), so fused-path slowdowns fail in CI instead of
 surfacing in benchmark reports.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 import time
@@ -64,21 +77,23 @@ BENCH_SPEC = GanModelSpec(
     disc_fake=_disc_logits)
 
 
-def make_trainer(driver: str, algorithm: str) -> Trainer:
+def make_trainer(driver: str, algorithm: str,
+                 layout: str = "stacked") -> Trainer:
     pcfg = ProtocolConfig(n_devices=K, n_d=1, n_g=1, sample_size=4,
                           server_sample_size=4, lr_d=1e-3, lr_g=1e-3)
     data = jax.random.normal(jax.random.PRNGKey(9), (K, 8, DIM))
     return Trainer(BENCH_SPEC, pcfg, _gan_init, data,
                    jax.random.PRNGKey(0), algorithm=algorithm,
-                   channel_cfg=ChannelConfig(n_devices=K), driver=driver)
+                   channel_cfg=ChannelConfig(n_devices=K), driver=driver,
+                   layout=layout)
 
 
 def time_driver(driver: str, algorithm: str, n_rounds: int,
-                repeats: int = 3) -> float:
+                layout: str = "stacked", repeats: int = 3) -> float:
     """rounds/sec: best of `repeats` timed runs of n_rounds after a
     warmup run, so the jitted round (host) / chunk (fused) is already
     compiled and scheduler noise on shared machines is suppressed."""
-    trainer = make_trainer(driver, algorithm)
+    trainer = make_trainer(driver, algorithm, layout)
     trainer.run(n_rounds)                       # warmup incl. compile
     jax.block_until_ready(trainer.state)
     best = 0.0
@@ -90,15 +105,34 @@ def time_driver(driver: str, algorithm: str, n_rounds: int,
     return best
 
 
-def bench_algorithm(algorithm: str, n_rounds: int) -> float:
-    host_rps = time_driver("host", algorithm, n_rounds)
-    fused_rps = time_driver("fused", algorithm, n_rounds)
+def bench_pair(algorithm: str, n_rounds: int, layout: str) -> dict:
+    """host (per-round dispatch) vs fused, on one layout."""
+    host_rps = time_driver("host", algorithm, n_rounds, layout)
+    fused_rps = time_driver("fused", algorithm, n_rounds, layout)
     speedup = fused_rps / host_rps
-    print(f"driver_bench_{algorithm}_host,{1e6 / host_rps:.1f},"
-          f"rounds_per_s={host_rps:.1f}")
-    print(f"driver_bench_{algorithm}_fused,{1e6 / fused_rps:.1f},"
+    tag = f"driver_bench_{layout}_{algorithm}"
+    print(f"{tag}_host,{1e6 / host_rps:.1f},rounds_per_s={host_rps:.1f}")
+    print(f"{tag}_fused,{1e6 / fused_rps:.1f},"
           f"rounds_per_s={fused_rps:.1f};speedup={speedup:.2f}x")
-    return speedup
+    return {"per_round_rps": host_rps, "fused_rps": fused_rps,
+            "speedup": speedup}
+
+
+def write_json(path: str, layout: str, results: dict, n_rounds: int):
+    """Merge this layout's numbers into BENCH_driver.json, preserving
+    the other layout's entry (and its own measurement length)."""
+    payload = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            payload = {}
+    payload.setdefault("layouts", {})[layout] = {
+        "k": K, "rounds": n_rounds, "algorithms": results}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {path}")
 
 
 def main(argv=None):
@@ -107,21 +141,38 @@ def main(argv=None):
                     help="reduced CI run; exit non-zero on fused-path "
                          "regression below 1.2x")
     ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--layout", choices=["stacked", "mesh"],
+                    default="stacked")
+    ap.add_argument("--json", default="BENCH_driver.json",
+                    help="merge rounds/sec per layout into this file")
     args = ap.parse_args(argv)
     n_rounds = args.rounds or (20 if args.smoke else N_ROUNDS)
 
-    speedups = {alg: bench_algorithm(alg, n_rounds)
-                for alg in ("proposed", "fedgan")}
+    if args.layout == "mesh":
+        if len(jax.devices()) < K:
+            print(f"FAIL: --layout mesh needs >= {K} devices, have "
+                  f"{len(jax.devices())} (set XLA_FLAGS="
+                  f"--xla_force_host_platform_device_count={K})",
+                  file=sys.stderr)
+            return 2
+        algorithms = ("proposed",)      # shard_round: proposed only
+    else:
+        algorithms = ("proposed", "fedgan")
+
+    results = {alg: bench_pair(alg, n_rounds, args.layout)
+               for alg in algorithms}
+    write_json(args.json, args.layout, results, n_rounds)
 
     status = 0
-    for alg, s in speedups.items():
+    for alg, r in results.items():
+        s = r["speedup"]
         if args.smoke and s < 1.2:
-            print(f"FAIL: {alg} fused speedup {s:.2f}x below the 1.2x "
-                  f"smoke threshold", file=sys.stderr)
+            print(f"FAIL: {args.layout}/{alg} fused speedup {s:.2f}x "
+                  f"below the 1.2x smoke threshold", file=sys.stderr)
             status = 2
         elif s < 2.0:
-            print(f"WARNING: {alg} fused speedup {s:.2f}x below the 2x "
-                  f"target", file=sys.stderr)
+            print(f"WARNING: {args.layout}/{alg} fused speedup {s:.2f}x "
+                  f"below the 2x target", file=sys.stderr)
     return status
 
 

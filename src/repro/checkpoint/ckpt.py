@@ -18,15 +18,24 @@ _SEP = "::"
 def _flatten(tree):
     flat = {}
 
+    def mark(prefix, marker):
+        flat[f"{prefix}{_SEP}{marker}" if prefix else marker] = np.zeros(0)
+
     def walk(prefix, node):
         if isinstance(node, dict):
+            if not node:   # empty containers must round-trip (sgd opt state)
+                mark(prefix, "__empty_dict__")
+                return
             for k in sorted(node):
                 walk(f"{prefix}{_SEP}{k}" if prefix else str(k), node[k])
         elif isinstance(node, (list, tuple)):
+            if not node:
+                mark(prefix, "__empty_list__")
+                return
             for i, v in enumerate(node):
                 walk(f"{prefix}{_SEP}[{i}]", v)
         elif node is None:
-            flat[prefix + f"{_SEP}__none__"] = np.zeros(0)
+            mark(prefix, "__none__")
         else:
             flat[prefix] = np.asarray(node)
 
@@ -42,8 +51,17 @@ def _unflatten(flat):
         if parts[-1] == "__none__":
             parts = parts[:-1]
             value = None
+        elif parts[-1] == "__empty_dict__":
+            parts = parts[:-1]
+            value = {}
+        elif parts[-1] == "__empty_list__":
+            parts = parts[:-1]
+            value = []
         else:
             value = flat[key]
+        if not parts or parts == [""]:   # whole tree is one empty container
+            tree = value
+            continue
         node = tree
         for i, part in enumerate(parts):
             last = i == len(parts) - 1

@@ -10,9 +10,13 @@ Three interchangeable implementations:
   * `weighted_average`      — stacked leading device axis (pjit/GSPMD path;
                               the mean over the stacked axis lowers to the
                               all-reduce when that axis is mesh-sharded)
-  * `weighted_average_psum` — explicit collective for the shard_map path
-  * the Pallas `wavg` kernel (repro.kernels.wavg) — TPU hot-spot version,
-    reachable via ``impl="pallas"``.
+  * `weighted_average_psum` — explicit collective for the shard_map
+    (mesh-layout) path: per-leaf weighted psum with ``impl="jnp"``, or
+    the mesh hot path with ``impl="pallas"`` — the local tree flattened
+    into one payload, all-gathered once, and reduced by the Pallas
+    `wavg` kernel (the default inside `shard_round.shard_rounds_scan`)
+  * the Pallas `wavg` kernel (repro.kernels.wavg) — the MXU reduction
+    both ``impl="pallas"`` paths call into (interpret mode on CPU).
 """
 from __future__ import annotations
 
@@ -46,9 +50,44 @@ def weighted_average(stacked_params, weights, *, impl: str = "jnp"):
     return jax.tree.map(avg_leaf, stacked_params)
 
 
-def weighted_average_psum(local_params, local_weight, *, axis_names):
+def weighted_average_psum(local_params, local_weight, *, axis_names,
+                          impl: str = "jnp", interpret=None):
     """shard_map path: every mesh slice holds ITS device's parameters;
-    Algorithm 2 is a weighted psum over the device axes."""
+    Algorithm 2 is a weighted reduction over the device axes.
+
+    impl="jnp"    — per-leaf weighted psum (one collective per leaf).
+    impl="pallas" — the mesh hot path: the local tree is flattened into
+        ONE contiguous f32 payload, all-gathered over the device axes
+        into a (K, N) matrix, and reduced by the Pallas `wavg` kernel
+        ((1, K) x (K, N) on the MXU) — one collective + one kernel per
+        round instead of a tree of jnp means. `interpret=None` lets the
+        kernel wrapper pick interpret mode on CPU, so the same code path
+        runs everywhere (tests force it through interpret on host).
+    """
+    if impl == "pallas":
+        from repro.kernels.wavg import ops as wavg_ops
+
+        leaves, treedef = jax.tree_util.tree_flatten(local_params)
+        if not leaves:
+            return local_params
+        flat = jnp.concatenate(
+            [jnp.ravel(x).astype(jnp.float32) for x in leaves])
+        stacked = jax.lax.all_gather(flat, axis_names)       # (K, N)
+        w_full = jax.lax.all_gather(
+            local_weight.astype(jnp.float32), axis_names)    # (K,)
+        w_norm = _normalized(w_full)
+        avg_flat = wavg_ops.weighted_average(stacked, w_norm,
+                                             interpret=interpret)
+        out, off = [], 0
+        for x in leaves:
+            out.append(avg_flat[off:off + x.size].reshape(x.shape)
+                       .astype(x.dtype))
+            off += x.size
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    if impl != "jnp":
+        raise ValueError(f"unknown weighted_average_psum impl {impl!r}")
+
     total = jax.lax.psum(local_weight.astype(jnp.float32), axis_names)
 
     def avg_leaf(x):

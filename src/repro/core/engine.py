@@ -2,28 +2,53 @@
 the wireless channel simulator, wall-clock accounting, and periodic
 evaluation. This is the paper's experimental harness (Figs 3-6).
 
-Two drivers:
+The round-execution stack has TWO orthogonal axes:
 
-  driver="fused" — chunks of R rounds run through the unified engine
-      `protocol.rounds_scan` (as `gan_rounds_scan` for the proposed
-      protocol, `fedgan.fedgan_rounds_scan` for FedGAN): scheduling,
+EXECUTION LAYOUT — how the paper's K devices map onto hardware:
+
+  layout="stacked" (default) — devices are a stacked leading axis on
+      one logical device; vmap runs Algorithm 1 and Algorithm 2 is a
+      weighted mean over the axis (GSPMD lowers it to the all-reduce
+      when the axis is mesh-sharded through launch/steps.py).
+  layout="mesh" — devices are mesh slices under `jax.shard_map` with
+      explicit collectives (core.shard_round): Algorithm 1 touches no
+      collective, Algorithm 2 is one all-gather + the Pallas `wavg`
+      kernel per round, the server update is replicated shared-seed
+      computation. Requires >= K addressable devices (pass `mesh=` or
+      let the Trainer build a (K, 1) host mesh). Proposed protocol only.
+
+DRIVER — how rounds are dispatched:
+
+  driver="fused" — chunks of R rounds run as ONE XLA dispatch
+      (`protocol.rounds_scan` on the stacked layout,
+      `shard_round.shard_rounds_scan` on the mesh layout): scheduling,
       channel timing, the quantized uplink, the model math, and
-      wall-clock accounting are one XLA dispatch per chunk (donated
-      state, no per-round host round-trip). With a JITTABLE fid_fn
-      (e.g. metrics.fid_score_jnp-based), FID evaluation runs IN-SCAN
-      via lax.cond, so the whole run is a single compiled chunk; a
+      wall-clock accounting all inside one `lax.scan`, state donated.
+      With a JITTABLE fid_fn, FID runs IN-SCAN via lax.cond; a
       non-traceable fid_fn falls back to eval-boundary chunking.
-  driver="host" — the original per-round host loop over numpy
-      scheduling/channel state. Retained as the EQUIVALENCE ORACLE: with
-      a deterministic scheduler (or fading=False) the fused driver must
-      reproduce its masks bitwise and params/metrics to float32
-      round-off, which tests/test_driver_equivalence.py enforces — for
-      BOTH the proposed protocol and FedGAN.
+  driver="host" — one round per dispatch with numpy scheduling/channel
+      state. On the stacked layout this is the original per-round loop,
+      retained as the EQUIVALENCE ORACLE: the fused drivers (BOTH
+      layouts) must reproduce its masks bitwise and params/metrics to
+      float32 round-off (tests/test_driver_equivalence.py). On the mesh
+      layout it dispatches `shard_map_round` per round — the baseline
+      `benchmarks/driver_bench.py --layout mesh` measures fused speedup
+      against.
   driver="auto" (default) — fused where supported, host otherwise.
 
-The centralized baseline has no fused path (its round has no
-scheduling/channel structure to fold); requesting driver="fused" for it
-raises instead of silently running the host loop.
+The per-algorithm construction (state init, round function, fused scan
+entry) lives in the `_ALGORITHMS` strategy table instead of `__init__`
+branching; the centralized baseline has no fused path (its round has no
+scheduling/channel structure to fold), so requesting driver="fused" for
+it raises instead of silently running the host loop.
+
+CHECKPOINT/RESUME: `save_checkpoint`/`restore` serialize the model
+state together with `_round_index`, `_clock`, and the scheduler carry
+through `repro.checkpoint`, so a resumed fused run (either layout)
+continues masks, params, AND the wallclock curve exactly — every
+per-round random draw is keyed from the root key and the absolute round
+index. Host-driver resume is exact only for deterministic schedulers
+with fading off (its numpy streams are not serialized).
 """
 from __future__ import annotations
 
@@ -36,14 +61,51 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ProtocolConfig
-from repro.core import protocol, fedgan
+from repro.core import protocol, fedgan, shard_round
 from repro.core.channel import ChannelConfig, ChannelSimulator, round_wallclock
 from repro.core.jax_channel import JaxChannel
 from repro.core.jax_scheduling import JaxScheduler
 from repro.core.scheduling import SchedulerState, schedule_round
 
+
+@dataclasses.dataclass(frozen=True)
+class _Algorithm:
+    """Strategy record: how one algorithm builds state, its per-round
+    host function, and (when fused-capable) its stacked rounds-scan."""
+    make_state: Callable          # (key, init_fn, pcfg, n_devices) -> state
+    round_fn: Callable            # (spec, pcfg) -> (s, d, w, k) -> (s, m)
+    rounds_scan: Optional[Callable] = None   # unified stacked engine entry
+    fedgan: bool = False
+    pooled: bool = False          # centralized: pools the data shards
+
+    @property
+    def fused(self) -> bool:
+        return self.rounds_scan is not None
+
+
+_ALGORITHMS = {
+    "proposed": _Algorithm(
+        make_state=protocol.make_train_state,
+        round_fn=lambda spec, pcfg: (
+            lambda s, d, w, k: protocol.gan_round(spec, pcfg, s, d, w, k)),
+        rounds_scan=protocol.gan_rounds_scan),
+    "fedgan": _Algorithm(
+        make_state=fedgan.make_fedgan_state,
+        round_fn=lambda spec, pcfg: (
+            lambda s, d, w, k: fedgan.fedgan_round(spec, pcfg, s, d, w, k)),
+        rounds_scan=fedgan.fedgan_rounds_scan,
+        fedgan=True),
+    "centralized": _Algorithm(
+        make_state=lambda key, init_fn, pcfg, n: protocol.make_train_state(
+            key, init_fn, pcfg, 1),
+        round_fn=lambda spec, pcfg: (
+            lambda s, d, w, k: protocol.centralized_step(spec, pcfg, s, d, k)),
+        pooled=True),
+}
+
 # Algorithms with a fused multi-round scan path (the unified engine).
-FUSED_ALGORITHMS = ("proposed", "fedgan")
+FUSED_ALGORITHMS = tuple(name for name, a in _ALGORITHMS.items() if a.fused)
+LAYOUTS = ("stacked", "mesh")
 
 
 @dataclasses.dataclass
@@ -60,16 +122,39 @@ class Trainer:
     """Runs the proposed protocol, FedGAN, or centralized training over a
     simulated device fleet. All model math is jitted; the fused driver
     additionally folds scheduling + channel timing into the same
-    dispatch, while the host driver keeps them in numpy."""
+    dispatch, while the host driver keeps them in numpy. See the module
+    docstring for the layout x driver matrix."""
 
     def __init__(self, spec: protocol.GanModelSpec, pcfg: ProtocolConfig,
                  init_fn: Callable, data_stacked, key, *,
                  algorithm: str = "proposed",
                  channel_cfg: Optional[ChannelConfig] = None,
                  disc_step_flops: float = 1e9, gen_step_flops: float = 1e9,
-                 driver: str = "auto"):
+                 driver: str = "auto", layout: str = "stacked",
+                 mesh=None, device_axes=("data",)):
+        if algorithm not in _ALGORITHMS:
+            raise ValueError(f"unknown algorithm {algorithm!r} "
+                             f"(have {tuple(_ALGORITHMS)})")
+        algo = _ALGORITHMS[algorithm]
+        if layout not in LAYOUTS:
+            raise ValueError(f"unknown layout {layout!r} (have {LAYOUTS})")
+        if layout == "mesh" and algorithm != "proposed":
+            raise ValueError(
+                f"layout='mesh' implements the proposed protocol only "
+                f"(got algorithm {algorithm!r}); use layout='stacked'")
+        if driver not in ("auto", "fused", "host"):
+            raise ValueError(f"unknown driver {driver!r}")
+        if driver == "fused" and not algo.fused:
+            raise ValueError(
+                f"driver='fused' is not supported for algorithm "
+                f"{algorithm!r} (fused algorithms: {FUSED_ALGORITHMS}); "
+                f"use driver='host' or 'auto'")
+        if driver == "auto":
+            driver = "fused" if algo.fused else "host"
+
         self.spec, self.pcfg = spec, pcfg
-        self.algorithm = algorithm
+        self.algorithm, self._algo = algorithm, algo
+        self.driver, self.layout = driver, layout
         self.key = key
         self.data = data_stacked
         self.n_devices = pcfg.n_devices
@@ -81,34 +166,23 @@ class Trainer:
         self.rng = np.random.default_rng(0)
         self.disc_step_flops = disc_step_flops
         self.gen_step_flops = gen_step_flops
-        if driver not in ("auto", "fused", "host"):
-            raise ValueError(f"unknown driver {driver!r}")
-        if driver == "fused" and algorithm not in FUSED_ALGORITHMS:
-            raise ValueError(
-                f"driver='fused' is not supported for algorithm "
-                f"{algorithm!r} (fused algorithms: {FUSED_ALGORITHMS}); "
-                f"use driver='host' or 'auto'")
-        if driver == "auto":
-            driver = "fused" if algorithm in FUSED_ALGORITHMS else "host"
-        self.driver = driver
 
-        if algorithm == "fedgan":
-            self.state = fedgan.make_fedgan_state(key, init_fn, pcfg,
-                                                  self.n_devices)
-            self._round = jax.jit(
-                lambda s, d, w, k: fedgan.fedgan_round(spec, pcfg, s, d, w, k))
-        elif algorithm == "centralized":
-            self.state = protocol.make_train_state(key, init_fn, pcfg, 1)
-            pooled = jax.tree.map(
+        self.state = algo.make_state(key, init_fn, pcfg, self.n_devices)
+        if algo.pooled:
+            self._pooled = jax.tree.map(
                 lambda x: x.reshape((-1,) + x.shape[2:]), data_stacked)
-            self._pooled = pooled
-            self._round = jax.jit(
-                lambda s, d, w, k: protocol.centralized_step(spec, pcfg, s, d, k))
+
+        self.device_axes = device_axes
+        self.mesh = None
+        if layout == "mesh":
+            if mesh is None:
+                from repro.launch.mesh import make_host_mesh
+                mesh = make_host_mesh(pcfg.n_devices, 1)
+            self.mesh = mesh
+            self._round = shard_round.shard_map_round(
+                spec, pcfg, mesh, device_axes=device_axes)
         else:
-            self.state = protocol.make_train_state(key, init_fn, pcfg,
-                                                   self.n_devices)
-            self._round = jax.jit(
-                lambda s, d, w, k: protocol.gan_round(spec, pcfg, s, d, w, k))
+            self._round = jax.jit(algo.round_fn(spec, pcfg))
 
         if self.driver == "fused":
             self.jax_channel = JaxChannel(channel_cfg)
@@ -116,14 +190,14 @@ class Trainer:
                 policy=pcfg.scheduler, n_devices=pcfg.n_devices,
                 ratio=pcfg.scheduling_ratio)
             self._sched_carry = self.jax_sched.init_carry()
-            self._chunk_fns: dict[int, Callable] = {}
+            self._chunk_fns: dict[tuple, tuple] = {}
 
         self._disc_nparams = protocol.count_params(self.state["disc"])
         self._gen_nparams = protocol.count_params(self.state["gen"])
         # Actual uplink payload at the protocol's quantization width
         # (both nets for FedGAN) — drives the channel's upload timing.
         self._uplink_bits = protocol.uplink_payload_bits(
-            self.state, pcfg, fedgan=algorithm == "fedgan")
+            self.state, pcfg, fedgan=algo.fedgan)
         self.history: list[RoundRecord] = []
         self._clock = 0.0
         self._round_index = 0
@@ -138,21 +212,17 @@ class Trainer:
                               fid_fn=fid_fn, verbose=verbose)
 
     # ------------------------------------------------------------------
-    # fused driver — R rounds per dispatch
+    # fused driver — R rounds per dispatch (both layouts)
     # ------------------------------------------------------------------
-    def _rounds_scan_fn(self):
-        """The unified engine entry for this algorithm."""
-        if self.algorithm == "fedgan":
-            return fedgan.fedgan_rounds_scan
-        return protocol.gan_rounds_scan
-
     def _chunk_fn(self, n: int, eval_every: int = 0,
                   fid_fn: Optional[Callable] = None):
-        """Jitted `rounds_scan` over a fixed chunk length n; the start
-        round is traced so one compile serves every chunk of this
-        length. State and scheduler carry are donated. With eval_every >
-        0 the (jittable) fid_fn is folded into the scan via lax.cond, so
-        FID rounds need no chunk boundary."""
+        """Chunk function over a fixed length n, per layout: the jitted
+        stacked `rounds_scan` or the mesh `shard_rounds_scan`, both with
+        the signature (state, sched_carry, data, key, start_round) and
+        donated state/carry. The start round is traced, so one compile
+        serves every chunk of this length. With eval_every > 0 the
+        (jittable) fid_fn is folded into the scan via lax.cond, so FID
+        rounds need no chunk boundary."""
         cache_key = (n, eval_every)
         entry = self._chunk_fns.get(cache_key)
         # The cache holds a strong reference to the fid_fn each chunk
@@ -161,23 +231,38 @@ class Trainer:
         if entry is not None and (not eval_every or entry[0] is fid_fn):
             return entry[1]
         spec, pcfg = self.spec, self.pcfg
-        scan = self._rounds_scan_fn()
 
-        def run_chunk(state, sched_carry, data, key, start_round):
+        if self.layout == "mesh":
             eval_fn = None
             if eval_every:
-                eval_fn = lambda gen, t: fid_fn(
+                eval_fn = lambda gen, t, key: fid_fn(
                     gen, jax.random.fold_in(key, 10_000 + t))
-            return scan(
-                spec, pcfg, state, data, key, n,
+            fn = shard_round.shard_rounds_scan(
+                spec, pcfg, self.mesh, n,
                 channel=self.jax_channel, scheduler=self.jax_sched,
-                sched_carry=sched_carry, start_round=start_round,
+                device_axes=self.device_axes,
                 disc_step_flops=self.disc_step_flops,
                 gen_step_flops=self.gen_step_flops,
                 uplink_bits=self._uplink_bits,
                 eval_fn=eval_fn, eval_every=eval_every)
+        else:
+            scan = self._algo.rounds_scan
 
-        fn = jax.jit(run_chunk, donate_argnums=(0, 1))
+            def run_chunk(state, sched_carry, data, key, start_round):
+                eval_fn = None
+                if eval_every:
+                    eval_fn = lambda gen, t: fid_fn(
+                        gen, jax.random.fold_in(key, 10_000 + t))
+                return scan(
+                    spec, pcfg, state, data, key, n,
+                    channel=self.jax_channel, scheduler=self.jax_sched,
+                    sched_carry=sched_carry, start_round=start_round,
+                    disc_step_flops=self.disc_step_flops,
+                    gen_step_flops=self.gen_step_flops,
+                    uplink_bits=self._uplink_bits,
+                    eval_fn=eval_fn, eval_every=eval_every)
+
+            fn = jax.jit(run_chunk, donate_argnums=(0, 1))
         self._chunk_fns[cache_key] = (fid_fn if eval_every else None, fn)
         return fn
 
@@ -268,7 +353,7 @@ class Trainer:
                 disc_step_flops=self.disc_step_flops,
                 gen_step_flops=self.gen_step_flops,
                 n_d=self.pcfg.n_d, n_g=self.pcfg.n_g,
-                fedgan=self.algorithm == "fedgan",
+                fedgan=self._algo.fedgan,
                 uplink_bits=self._uplink_bits)
             active = mask & ~timing.stragglers
             weights = jnp.asarray(
@@ -277,13 +362,13 @@ class Trainer:
 
             # Steps 2-5 (jitted)
             round_key = jax.random.fold_in(self.key, t)
-            data = self._pooled if self.algorithm == "centralized" else self.data
+            data = self._pooled if self._algo.pooled else self.data
             self.state, metrics = self._round(self.state, data, weights,
                                               round_key)
 
             wall = round_wallclock(timing, mask,
                                    schedule=self.pcfg.schedule,
-                                   fedgan=self.algorithm == "fedgan")
+                                   fedgan=self._algo.fedgan)
             self._clock += wall
             fid = None
             if fid_fn is not None and eval_every and (t + 1) % eval_every == 0:
@@ -297,6 +382,51 @@ class Trainer:
             if verbose:
                 self._print_record(rec)
         return self.history
+
+    # ------------------------------------------------------------------
+    # checkpoint / resume
+    # ------------------------------------------------------------------
+    def save_checkpoint(self, directory: str):
+        """Serialize model state + round index + wallclock + scheduler
+        carry, so `restore` continues the run — including the wallclock
+        curve — exactly (fused drivers; see module docstring for the
+        host-driver caveat)."""
+        from repro.checkpoint import save_checkpoint
+        carry = (jax.device_get(self._sched_carry)
+                 if self.driver == "fused" else
+                 {"rr_cursor": np.int32(self.sched.rr_cursor),
+                  # native f64: the numpy EWMA stream must resume exactly
+                  "ewma_rate": np.asarray(self.sched.ewma_rate)})
+        tree = {"state": self.state,
+                "trainer": {"round_index": np.int64(self._round_index),
+                            "clock": np.float64(self._clock),
+                            "sched_carry": carry}}
+        return save_checkpoint(
+            directory, self._round_index, tree,
+            metadata={"algorithm": self.algorithm, "layout": self.layout,
+                      "driver": self.driver})
+
+    def restore(self, directory: str, step: Optional[int] = None):
+        """Load a checkpoint written by `save_checkpoint` (latest by
+        default) and position the trainer to continue from it."""
+        from repro.checkpoint import load_checkpoint
+        tree, step, _ = load_checkpoint(directory, step)
+        self.state = jax.tree.map(
+            lambda ref, x: jnp.asarray(x, getattr(ref, "dtype", None)),
+            self.state, tree["state"])
+        extra = tree["trainer"]
+        self._round_index = int(extra["round_index"])
+        self._clock = float(extra["clock"])
+        carry = extra["sched_carry"]
+        if self.driver == "fused":
+            self._sched_carry = {
+                "rr_cursor": jnp.int32(carry["rr_cursor"]),
+                "ewma_rate": jnp.asarray(carry["ewma_rate"], jnp.float32)}
+        else:
+            self.sched.rr_cursor = int(carry["rr_cursor"])
+            self.sched.ewma_rate = np.asarray(carry["ewma_rate"],
+                                              np.float64)
+        return step
 
     # ------------------------------------------------------------------
     @staticmethod

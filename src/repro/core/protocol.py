@@ -319,6 +319,37 @@ def count_params(tree) -> int:
     return sum(int(x.size) for x in jax.tree_util.tree_leaves(tree))
 
 
+def schedule_and_time(pcfg: ProtocolConfig, channel, scheduler, sched_carry,
+                      round_key, *, disc_nparams: int, gen_nparams: int,
+                      disc_step_flops: float, gen_step_flops: float,
+                      fedgan: bool, uplink_bits):
+    """Step 1 + channel accounting for one round, shared by EVERY
+    execution layout of the fused engine (stacked `rounds_scan` and the
+    mesh `shard_round.shard_rounds_scan`): the per-round rates/scheduler/
+    timing keys are derived from `round_key` with fixed salts, so both
+    layouts see bitwise-identical masks, stragglers, and weights.
+
+    Returns (mask, new_sched_carry, timing, weights).
+    """
+    k_rates = jax.random.fold_in(round_key, _SALT_RATES)
+    k_sched = jax.random.fold_in(round_key, _SALT_SCHED)
+    k_timing = jax.random.fold_in(round_key, _SALT_TIMING)
+
+    # Schedule against a fresh fading draw, then time the round (second
+    # draw, mirroring the host loop's two rng calls).
+    rates = channel.uplink_rates(k_rates, scheduler.n_scheduled)
+    mask, sched_carry = jax_scheduling.schedule_step(scheduler, sched_carry,
+                                                     rates, k_sched)
+    timing = channel.round_timing(
+        k_timing, mask, disc_params=disc_nparams, gen_params=gen_nparams,
+        disc_step_flops=disc_step_flops, gen_step_flops=gen_step_flops,
+        n_d=pcfg.n_d, n_g=pcfg.n_g, fedgan=fedgan, uplink_bits=uplink_bits)
+    active = mask & ~timing.stragglers
+    weights = jnp.where(active, float(pcfg.sample_size),
+                        0.0).astype(jnp.float32)
+    return mask, sched_carry, timing, weights
+
+
 def uplink_payload_bits(state, pcfg: ProtocolConfig, *,
                         fedgan: bool = False) -> int:
     """Per-device upload payload in bits at the protocol's quantization
@@ -372,23 +403,13 @@ def rounds_scan(round_fn, pcfg: ProtocolConfig, state, data_stacked, key,
     def body(carry, t):
         st, sc = carry
         round_key = jax.random.fold_in(key, t)
-        k_rates = jax.random.fold_in(round_key, _SALT_RATES)
-        k_sched = jax.random.fold_in(round_key, _SALT_SCHED)
-        k_timing = jax.random.fold_in(round_key, _SALT_TIMING)
 
-        # Step 1: schedule against a fresh fading draw, then time the
-        # round (second draw, mirroring the host loop's two rng calls).
-        rates = channel.uplink_rates(k_rates, scheduler.n_scheduled)
-        mask, sc = jax_scheduling.schedule_step(scheduler, sc, rates,
-                                                k_sched)
-        timing = channel.round_timing(
-            k_timing, mask, disc_params=disc_nparams,
-            gen_params=gen_nparams, disc_step_flops=disc_step_flops,
-            gen_step_flops=gen_step_flops, n_d=pcfg.n_d, n_g=pcfg.n_g,
+        # Step 1 + channel accounting (layout-shared keying)
+        mask, sc, timing, weights = schedule_and_time(
+            pcfg, channel, scheduler, sc, round_key,
+            disc_nparams=disc_nparams, gen_nparams=gen_nparams,
+            disc_step_flops=disc_step_flops, gen_step_flops=gen_step_flops,
             fedgan=fedgan, uplink_bits=uplink_bits)
-        active = mask & ~timing.stragglers
-        weights = jnp.where(active, float(pcfg.sample_size),
-                            0.0).astype(jnp.float32)
 
         # Steps 2-5
         st, metrics = round_fn(st, data_stacked, weights, round_key)

@@ -1,31 +1,56 @@
-"""Manual-collective (shard_map) implementation of one protocol round.
+"""Mesh execution layout for protocol rounds: shard_map + explicit
+collectives, single-round and FUSED multi-round.
 
-The pjit path (core.protocol.gan_round) expresses the paper's K devices
-as a stacked leading axis and lets GSPMD insert the averaging
-all-reduce. This module expresses the SAME round with explicit
-`jax.lax.psum` collectives under `jax.shard_map`: every mesh slice IS a
-device — local discriminator steps touch no collective (Algorithm 1 is
-embarrassingly parallel), Algorithm 2 is a weighted psum, and the server
-update is replicated shared-seed computation (the paper's single server
-maps to identical per-slice generator math — no gradient collective is
-needed because the shared noise makes every slice compute the same
-update).
+The round engine has two first-class execution layouts (see
+core/engine.py for the driver/layout matrix):
 
-Used by tests to prove the two paths agree bit-for-bit on a host mesh,
-and by the §Perf hillclimb to compare collective schedules.
+  layout="stacked" — the paper's K devices are a stacked leading axis;
+      vmap/GSPMD insert the averaging all-reduce (`protocol.gan_round`,
+      `protocol.rounds_scan`).
+  layout="mesh"    — THIS module: every mesh slice IS a device under
+      `jax.shard_map`. Local discriminator steps touch no collective
+      (Algorithm 1 is embarrassingly parallel), Algorithm 2 is an
+      explicit weighted reduction over the device axes, and the server
+      update is replicated shared-seed computation (the paper's single
+      server maps to identical per-slice generator math — no gradient
+      collective is needed because the shared noise makes every slice
+      compute the same update).
+
+Two entry points:
+
+  `shard_map_round`  — ONE round per dispatch (weights supplied by the
+      host). The per-round oracle of the mesh layout and the baseline
+      the §Perf hillclimb measures fused speedups against.
+  `shard_rounds_scan` — the fused engine on the mesh: R complete rounds
+      (Step 1 scheduling, channel timing, the quantized uplink keyed
+      identically to the stacked layout, Algorithm 2 via the Pallas
+      `wavg` kernel by default, and the Fig. 1/2 wall-clock composition)
+      run INSIDE shard_map as one `lax.scan` — one XLA dispatch per
+      chunk, donated state, same carry/out structure as
+      `protocol.rounds_scan`, so `engine.Trainer(layout="mesh")` drives
+      it through the unchanged fused driver.
+
+Equivalence contract (tests/test_driver_equivalence.py mesh matrix,
+tests/test_multidevice.py): on a forced multi-device host mesh both
+layouts reproduce the host oracle's masks BITWISE (the per-round keys
+come from `protocol.schedule_and_time`, shared verbatim) and its
+params/metrics to float32 round-off.
 """
 from __future__ import annotations
 
-from functools import partial
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ProtocolConfig
-from repro.core import quantize
-from repro.core.protocol import GanModelSpec, device_update, server_update
+from repro.core import jax_channel, quantize
+from repro.core.protocol import (GanModelSpec, count_params, device_update,
+                                 schedule_and_time, server_update,
+                                 uplink_payload_bits)
 from repro.core.averaging import weighted_average_psum
+from repro.sharding import rules
 
 
 def _shard_map(f, *, mesh, in_specs, out_specs):
@@ -39,12 +64,60 @@ def _shard_map(f, *, mesh, in_specs, out_specs):
                      check_rep=False)
 
 
+def _slice_round_body(spec: GanModelSpec, pcfg: ProtocolConfig, axis,
+                      avg_impl: str, my_index, gen, disc, gen_opt,
+                      disc_opt_k, data_k, w_k, weights, disc_objs_weight_sum,
+                      round_key):
+    """Steps 2-5 of one round as seen by ONE mesh slice (= one device).
+
+    Shared by the single-round and fused entry points so both layouts of
+    the mesh path run literally the same per-round math.
+    Returns (gen, disc_avg, gen_opt, disc_opt_k, metrics).
+    """
+    disc_k, disc_opt_k, disc_obj = device_update(
+        spec, pcfg, gen, disc, disc_opt_k, data_k, round_key, my_index)
+
+    # Step 3 — quantized uplink, keyed exactly as the stacked layout's
+    # `roundtrip_stacked` (device index = this slice's axis index), so
+    # both layouts quantize bitwise-identically.
+    if pcfg.quantize_bits < 32:
+        disc_k = quantize.roundtrip(
+            quantize.device_uplink_key(round_key, my_index), disc_k,
+            pcfg.quantize_bits)
+
+    # Algorithm 2 over the device axes — Pallas wavg kernel on the flat
+    # all-gathered payload by default (one collective + one kernel),
+    # per-leaf psum with impl="jnp".
+    disc_avg = weighted_average_psum(disc_k, w_k, axis_names=axis,
+                                     impl=avg_impl)
+
+    disc_for_gen = disc_avg if pcfg.schedule == "serial" else disc
+    gen, gen_opt, gen_obj = server_update(spec, pcfg, gen, gen_opt,
+                                          disc_for_gen, round_key)
+
+    w = w_k.astype(jnp.float32)
+    wsum = jnp.maximum(disc_objs_weight_sum, 1e-12)
+    metrics = {
+        "disc_objective": jax.lax.psum(disc_obj * w, axis) / wsum,
+        "gen_objective": gen_obj,
+        "participation": (weights > 0).astype(jnp.float32).mean(),
+    }
+    return gen, disc_avg, gen_opt, disc_opt_k, metrics
+
+
+# ---------------------------------------------------------------------------
+# One round per dispatch (host-scheduled weights — the mesh oracle)
+# ---------------------------------------------------------------------------
+
 def shard_map_round(spec: GanModelSpec, pcfg: ProtocolConfig, mesh,
                     device_axes=("data",)):
-    """Build a jitted round function over `mesh` with explicit collectives.
+    """Build a jitted single-round function over `mesh` with explicit
+    collectives. Expects state["disc_opt"]/data/weights stacked over the
+    device axes (leading K == prod of device-axis sizes).
 
-    Expects state["disc_opt"]/data/weights stacked over the device axes
-    (leading K == prod of device-axis sizes).
+    The jitted shard_map closure is built once on first call and cached,
+    so repeated per-round dispatches pay dispatch latency only — this is
+    the baseline `shard_rounds_scan` is benchmarked against.
     """
     axis = device_axes
 
@@ -54,65 +127,164 @@ def shard_map_round(spec: GanModelSpec, pcfg: ProtocolConfig, mesh,
         data_k = jax.tree.map(lambda x: x[0], data_local)
         disc_opt_k = jax.tree.map(lambda x: x[0], state["disc_opt"])
         w_k = weight_local[0]
+        weights = jax.lax.all_gather(w_k, axis)
+        wsum = jax.lax.psum(w_k.astype(jnp.float32), axis)
 
-        disc_k, disc_opt_k, disc_obj = device_update(
-            spec, pcfg, state["gen"], state["disc"], disc_opt_k, data_k,
-            round_key, my_index)
-
-        # Step 3 — quantized uplink, keyed exactly as the vmap path's
-        # `roundtrip_stacked` (device index = this slice's axis index),
-        # so both layouts quantize bitwise-identically.
-        if pcfg.quantize_bits < 32:
-            disc_k = quantize.roundtrip(
-                quantize.device_uplink_key(round_key, my_index), disc_k,
-                pcfg.quantize_bits)
-
-        # Algorithm 2 as an explicit weighted psum over the device axes.
-        disc_avg = weighted_average_psum(disc_k, w_k, axis_names=axis)
-
-        disc_for_gen = disc_avg if pcfg.schedule == "serial" else state["disc"]
-        gen, gen_opt, gen_obj = server_update(
-            spec, pcfg, state["gen"], state["gen_opt"], disc_for_gen,
+        gen, disc_avg, gen_opt, disc_opt_k, metrics = _slice_round_body(
+            spec, pcfg, axis, "jnp", my_index, state["gen"], state["disc"],
+            state["gen_opt"], disc_opt_k, data_k, w_k, weights, wsum,
             round_key)
 
-        w = w_k.astype(jnp.float32)
-        wsum = jnp.maximum(jax.lax.psum(w, axis), 1e-12)
-        metrics = {
-            "disc_objective": jax.lax.psum(disc_obj * w, axis) / wsum,
-            "gen_objective": gen_obj,
-            "participation": jax.lax.pmean((w > 0).astype(jnp.float32), axis),
-        }
         new_state = {
             "gen": gen, "disc": disc_avg, "gen_opt": gen_opt,
             "disc_opt": jax.tree.map(lambda x: x[None], disc_opt_k),
         }
         return new_state, metrics
 
-    stacked = P(device_axes)
-    rep = P()
-    state_specs = {"gen": rep, "disc": rep, "gen_opt": rep,
-                   "disc_opt": stacked}
-
-    def make_specs(tree, spec_leaf):
-        return jax.tree.map(lambda _: spec_leaf, tree,
-                            is_leaf=lambda x: x is None)
+    stacked, rep = P(device_axes), P()
+    cache = {}
 
     def run(state, data_stacked, weights, round_key):
-        in_specs = (
-            {k: make_specs(state[k], v) for k, v in state_specs.items()},
-            make_specs(data_stacked, stacked),
-            stacked,
-            rep,
-        )
-        out_specs = (
-            {"gen": make_specs(state["gen"], rep),
-             "disc": make_specs(state["disc"], rep),
-             "gen_opt": make_specs(state["gen_opt"], rep),
-             "disc_opt": make_specs(state["disc_opt"], stacked)},
-            {"disc_objective": rep, "gen_objective": rep, "participation": rep},
-        )
-        fn = _shard_map(round_body, mesh=mesh, in_specs=in_specs,
-                        out_specs=out_specs)
-        return jax.jit(fn)(state, data_stacked, weights, round_key)
+        if "fn" not in cache:
+            in_specs = (
+                rules.shard_round_state_specs(state, device_axes),
+                rules.tree_specs(data_stacked, stacked),
+                stacked,
+                rep,
+            )
+            out_specs = (
+                rules.shard_round_state_specs(state, device_axes),
+                {"disc_objective": rep, "gen_objective": rep,
+                 "participation": rep},
+            )
+            cache["fn"] = jax.jit(_shard_map(
+                round_body, mesh=mesh, in_specs=in_specs,
+                out_specs=out_specs))
+        return cache["fn"](state, data_stacked, weights, round_key)
+
+    return run
+
+
+# ---------------------------------------------------------------------------
+# Fused multi-round scan INSIDE shard_map — R rounds per dispatch
+# ---------------------------------------------------------------------------
+
+def shard_rounds_scan(spec: GanModelSpec, pcfg: ProtocolConfig, mesh,
+                      n_rounds: int, *, channel, scheduler,
+                      device_axes=("data",), disc_step_flops: float = 1e9,
+                      gen_step_flops: float = 1e9,
+                      uplink_bits: Optional[int] = None,
+                      avg_impl: str = "pallas",
+                      eval_fn: Optional[Callable] = None,
+                      eval_every: int = 0):
+    """The unified fused round engine on the MESH layout.
+
+    Builds `run(state, sched_carry, data_stacked, key, start_round) ->
+    (state, sched_carry, out)` — the exact chunk signature of the
+    stacked layout's `engine.Trainer._chunk_fn`, with state and
+    scheduler carry donated. `out` stacks per-round {"metrics",
+    "wallclock_s", "mask", "weights"[, "fid", "fid_eval"]} exactly like
+    `protocol.rounds_scan`.
+
+    Everything runs INSIDE shard_map: scheduling and channel timing are
+    replicated per-slice computation (deterministic given the round key,
+    so every slice agrees without a collective), Algorithm 1 is local to
+    each slice, the quantized uplink uses the slice's axis index as its
+    device key, and Algorithm 2 is `weighted_average_psum` — by default
+    `impl="pallas"`: one all-gather of the flat payload + one Pallas
+    `wavg` kernel per round (interpret-mode on CPU hosts).
+
+    channel:   core.jax_channel.JaxChannel over K = prod(device axes)
+    scheduler: core.jax_scheduling.JaxScheduler
+    eval_fn:   optional JITTABLE (gen_params, t, key) -> scalar run
+        in-scan via lax.cond on rounds where (t+1) % eval_every == 0
+        (replicated — gen is replicated, so every slice evaluates the
+        same FID).
+    """
+    axis = device_axes
+
+    def body(state, sched_carry, data_local, key, start_round):
+        my_index = jax.lax.axis_index(axis)
+        data_k = jax.tree.map(lambda x: x[0], data_local)
+        st = {"gen": state["gen"], "disc": state["disc"],
+              "gen_opt": state["gen_opt"],
+              "disc_opt": jax.tree.map(lambda x: x[0], state["disc_opt"])}
+        disc_nparams = count_params(st["disc"])
+        gen_nparams = count_params(st["gen"])
+        bits = uplink_bits
+        if bits is None:
+            bits = uplink_payload_bits(st, pcfg, fedgan=False)
+
+        def round_body(carry, t):
+            st, sc = carry
+            round_key = jax.random.fold_in(key, t)
+
+            # Step 1 + channel accounting: same helper (same salts, same
+            # draw order) as the stacked layout — masks are bitwise
+            # identical across layouts and vs the host oracle.
+            mask, sc, timing, weights = schedule_and_time(
+                pcfg, channel, scheduler, sc, round_key,
+                disc_nparams=disc_nparams, gen_nparams=gen_nparams,
+                disc_step_flops=disc_step_flops,
+                gen_step_flops=gen_step_flops, fedgan=False,
+                uplink_bits=bits)
+            w_k = weights[my_index]
+            wsum = jnp.maximum(weights.sum(), 1e-12)
+
+            gen, disc_avg, gen_opt, disc_opt_k, metrics = _slice_round_body(
+                spec, pcfg, axis, avg_impl, my_index, st["gen"], st["disc"],
+                st["gen_opt"], st["disc_opt"], data_k, w_k, weights, wsum,
+                round_key)
+
+            wall = jax_channel.round_wallclock(timing, mask,
+                                               schedule=pcfg.schedule)
+            new_st = {"gen": gen, "disc": disc_avg, "gen_opt": gen_opt,
+                      "disc_opt": disc_opt_k}
+            out = {"metrics": metrics, "wallclock_s": wall, "mask": mask,
+                   "weights": weights}
+            if eval_fn is not None and eval_every > 0:
+                do_eval = (t + 1) % eval_every == 0
+                out["fid"] = jax.lax.cond(
+                    do_eval,
+                    lambda g: jnp.float32(eval_fn(g, t, key)),
+                    lambda g: jnp.float32(jnp.nan), new_st["gen"])
+                out["fid_eval"] = do_eval
+            return (new_st, sc), out
+
+        rounds = jnp.asarray(start_round) + jnp.arange(n_rounds)
+        (st, sched_carry), out = jax.lax.scan(round_body,
+                                              (st, sched_carry), rounds)
+        new_state = {"gen": st["gen"], "disc": st["disc"],
+                     "gen_opt": st["gen_opt"],
+                     "disc_opt": jax.tree.map(lambda x: x[None],
+                                              st["disc_opt"])}
+        return new_state, sched_carry, out
+
+    stacked, rep = P(device_axes), P()
+    cache = {}
+
+    def run(state, sched_carry, data_stacked, key, start_round):
+        if "fn" not in cache:
+            state_specs = rules.shard_round_state_specs(state, device_axes)
+            out_round = {"metrics": {"disc_objective": rep,
+                                     "gen_objective": rep,
+                                     "participation": rep},
+                         "wallclock_s": rep, "mask": rep, "weights": rep}
+            if eval_fn is not None and eval_every > 0:
+                out_round["fid"] = rep
+                out_round["fid_eval"] = rep
+            in_specs = (state_specs,
+                        rules.tree_specs(sched_carry, rep),
+                        rules.tree_specs(data_stacked, stacked),
+                        rep, rep)
+            out_specs = (state_specs,
+                         rules.tree_specs(sched_carry, rep),
+                         out_round)
+            cache["fn"] = jax.jit(
+                _shard_map(body, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs),
+                donate_argnums=(0, 1))
+        return cache["fn"](state, sched_carry, data_stacked, key,
+                           start_round)
 
     return run

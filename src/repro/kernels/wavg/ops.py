@@ -15,6 +15,13 @@ def weighted_average(x, w, *, interpret: bool | None = None):
     """Weighted average over the leading (device) axis of one tensor.
 
     x: (K, ...) stacked parameter tensor; w: (K,) normalized weights.
+
+    The flattened payload is zero-padded up to BLOCK_N for the kernel
+    and the padded tail sliced off the (N_padded,) output before the
+    reshape — exact at every block edge (n = 1, BLOCK_N, BLOCK_N + 1:
+    tests/test_kernels.py). Also the entry point for the mesh-round hot
+    path: `core.averaging.weighted_average_psum(impl="pallas")` calls
+    this on the all-gathered flat payload, x = (K, N_total).
     """
     if interpret is None:
         interpret = _INTERPRET

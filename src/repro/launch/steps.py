@@ -74,23 +74,42 @@ def build_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
                      schedule: str = "serial",
                      pcfg_overrides: Optional[dict] = None,
                      act_disc_spec: Optional[object] = "default",
-                     fuse_rounds: int = 1):
-    """The protocol round as the pod-scale train step.
+                     fuse_rounds: int = 1,
+                     layout: str = "stacked"):
+    """The protocol round as the pod-scale train step, on either
+    execution layout.
 
     The paper's K devices = the mesh's device axes (pod x data slices).
     global_batch rows of real data are the per-round union of local
     samples: K * n_k = global_batch.
 
-    fuse_rounds > 1 wraps the round body in a `lax.scan` over
-    consecutive seeds (the fused-driver pattern of core.engine), so one
-    dispatch advances `fuse_rounds` rounds and returns stacked metrics.
+    layout="stacked" (default) — the stacked/GSPMD path: `gan_round`
+        under pjit with explicit NamedShardings; the device axis is a
+        sharded leading dim and Algorithm 2's weighted mean lowers to
+        the ICI all-reduce. fuse_rounds > 1 wraps the round body in a
+        `lax.scan` over consecutive seeds, and the state is DONATED so
+        launch/train.py chains chunks without copies. Returns
+        (step, (state, batch, weights, seed)) with step jitted;
+        step(state, batch, weights, seed) -> (state, metrics).
+
+    layout="mesh" — the explicit-collective path: `fuse_rounds` complete
+        rounds (Step 1 scheduling + channel timing + quantized uplink +
+        Pallas-wavg Algorithm 2 + wallclock) run INSIDE `jax.shard_map`
+        as one donated `lax.scan` dispatch via
+        `core.shard_round.shard_rounds_scan`. Tensor-parallel (model
+        axis) sharding within a slice is not applied on this layout yet
+        — params replicate over `model`; the stacked layout remains the
+        TP path. Returns (step, (state, sched_carry, tokens, key,
+        start_round)); step(...) -> (state, sched_carry, out) where out
+        stacks per-round metrics/wallclock_s/mask/weights. Encoder-fed
+        families (encdec/vlm) are not supported on this layout.
 
     The round applies the paper's quantized uplink per device
-    (pcfg.quantize_bits, default 16) inside `gan_round`; override with
-    pcfg_overrides={"quantize_bits": ...} (>= 32 disables it). Under
-    GSPMD the per-device quantization stays embarrassingly parallel —
-    per-leaf scale reduction and stochastic rounding are local to each
-    device slice.
+    (pcfg.quantize_bits, default 16) inside the round math; override
+    with pcfg_overrides={"quantize_bits": ...} (>= 32 disables it).
+    Under GSPMD the per-device quantization stays embarrassingly
+    parallel; under shard_map it is keyed by the slice's axis index, so
+    both layouts quantize bitwise-identically.
     """
     plan = rules.plan_for(cfg, mesh_cfg)
     k_dev = math.prod(mesh.shape[a] for a in plan.dev_axes)
@@ -111,6 +130,11 @@ def build_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
         pcfg = dataclasses.replace(pcfg, **pcfg_overrides)
 
     enc = needs_enc(cfg)
+    if layout == "mesh":
+        return _build_mesh_train_step(cfg, shape, mesh, plan, pcfg,
+                                      fuse_rounds)
+    if layout != "stacked":
+        raise ValueError(f"unknown layout {layout!r}")
 
     stacked_disc_specs = None  # filled after abstract init
 
@@ -178,9 +202,50 @@ def build_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
     out_shardings = (_named(mesh, state_sp), None)
 
     step = jax.jit(train_step, in_shardings=in_shardings,
-                   out_shardings=out_shardings)
+                   out_shardings=out_shardings, donate_argnums=(0,))
     args = (state_abs, batch_abs, weights_abs, seed_abs)
     return step, args
+
+
+def _build_mesh_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh, plan,
+                           pcfg: ProtocolConfig, fuse_rounds: int):
+    """layout="mesh" of `build_train_step`: `fuse_rounds` complete rounds
+    per dispatch inside shard_map, state + scheduler carry donated."""
+    from repro.core.channel import ChannelConfig
+    from repro.core.jax_channel import JaxChannel
+    from repro.core.jax_scheduling import JaxScheduler
+    from repro.core.shard_round import shard_rounds_scan
+
+    if needs_enc(cfg):
+        raise NotImplementedError(
+            "layout='mesh' does not support encoder-fed architectures "
+            "(encdec/vlm) yet; use layout='stacked'")
+    k_dev = math.prod(mesh.shape[a] for a in plan.dev_axes)
+    assert shape.global_batch % k_dev == 0
+    n_k = shape.global_batch // k_dev
+    seq = shape.seq_len
+
+    # act specs are GSPMD sharding constraints — inside shard_map the
+    # device axes are manual, so the spec-free backbone is used.
+    spec = make_backbone_spec(cfg, seq, dtype=COMPUTE_DTYPE)
+    channel = JaxChannel(ChannelConfig(n_devices=k_dev))
+    scheduler = JaxScheduler(policy=pcfg.scheduler, n_devices=k_dev,
+                             ratio=pcfg.scheduling_ratio)
+    step = shard_rounds_scan(spec, pcfg, mesh, max(1, fuse_rounds),
+                             channel=channel, scheduler=scheduler,
+                             device_axes=plan.dev_axes)
+
+    def init_fn(key):
+        return gan_model.gan_init(key, cfg)
+
+    state_abs = _bf16_floats(jax.eval_shape(
+        lambda: protocol.make_train_state(jax.random.PRNGKey(0), init_fn,
+                                          pcfg, k_dev)))
+    carry_abs = jax.eval_shape(scheduler.init_carry)
+    tokens_abs = jax.ShapeDtypeStruct((k_dev, n_k, seq), jnp.int32)
+    key_abs = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+    start_abs = jax.ShapeDtypeStruct((), jnp.int32)
+    return step, (state_abs, carry_abs, tokens_abs, key_abs, start_abs)
 
 
 # ---------------------------------------------------------------------------

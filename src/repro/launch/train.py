@@ -2,16 +2,31 @@
 
 On a real TPU pod this is the entry point (one process per host,
 jax.distributed.initialize handles the rest). On CPU it degenerates to a
-single-device run of the same jitted round — useful with
---mesh-debug-devices to exercise the mesh path end-to-end:
+single-device run of the same jitted round — useful with a forced host
+device count to exercise either mesh path end-to-end:
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     PYTHONPATH=src python -m repro.launch.train --arch mamba2-130m \
-        --data-dim 16 --model-dim 2 --rounds 2 --seq-len 64 --batch 32
+        --data-dim 8 --model-dim 1 --rounds 4 --seq-len 64 --batch 32 \
+        --layout mesh --fuse-rounds 2
+
+Execution layouts (see launch/steps.build_train_step):
+
+  --layout stacked  GSPMD/pjit rounds, device axis sharded (default)
+  --layout mesh     shard_map rounds with explicit collectives; the
+                    fused multi-round scan runs INSIDE shard_map
+
+Both layouts chunk `--rounds` into `--fuse-rounds`-sized dispatches with
+the state DONATED across chunks; any round count works — the remainder
+runs as a shorter final chunk through a per-length compile cache (the
+`engine.Trainer._chunk_fn` pattern). Checkpoint writes overlap the next
+dispatch: the state is device-copied, the next chunk is dispatched, and
+a background thread serializes the copy while the devices compute.
 """
 from __future__ import annotations
 
 import argparse
+import threading
 import time
 
 import jax
@@ -26,6 +41,55 @@ from repro.launch import steps as steps_mod
 from repro.launch.mesh import make_mesh, use_mesh
 
 
+class AsyncCheckpointer:
+    """Overlap checkpoint serialization with the next training dispatch.
+
+    `submit` takes a DEVICE-SIDE copy of the state (so donation of the
+    live buffers into the next chunk is safe), returns immediately, and
+    writes the copy from a background thread — the host callback blocks
+    only on the device copy, never on the next chunk's compute. One
+    write is in flight at a time; `finish()` drains the last one.
+    """
+
+    def __init__(self, directory: str):
+        self.directory = directory
+        self._thread = None
+        self._error = None
+
+    def submit(self, step_index: int, state, metadata=None):
+        from repro.checkpoint import save_checkpoint
+        self.finish()
+        snapshot = jax.tree.map(jnp.copy, state)
+
+        def _write():
+            try:
+                save_checkpoint(self.directory, step_index, snapshot,
+                                metadata=metadata)
+            except BaseException as e:   # re-raised at the next finish()
+                self._error = e
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+
+    def finish(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError(
+                f"async checkpoint write to {self.directory} failed") from err
+
+
+def chunk_lengths(rounds: int, fuse: int):
+    """`rounds` split into fuse-sized dispatches + a shorter remainder
+    chunk (each distinct length costs one compile, served by a cache)."""
+    chunks = [fuse] * (rounds // fuse)
+    if rounds % fuse:
+        chunks.append(rounds % fuse)
+    return chunks
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=list_archs(), default="mamba2-130m")
@@ -38,20 +102,25 @@ def main():
     ap.add_argument("--model-dim", type=int, default=2)
     ap.add_argument("--schedule", choices=["serial", "parallel"],
                     default="serial")
+    ap.add_argument("--layout", choices=["stacked", "mesh"],
+                    default="stacked",
+                    help="stacked = GSPMD/pjit rounds; mesh = shard_map "
+                         "rounds with the fused in-scan engine")
     ap.add_argument("--fuse-rounds", type=int, default=1,
-                    help="rounds fused per XLA dispatch (lax.scan); 1 = "
-                         "host loop, >1 = the compiled multi-round driver")
+                    help="rounds fused per XLA dispatch (lax.scan); any "
+                         "--rounds works — the remainder runs as a "
+                         "shorter final chunk")
     ap.add_argument("--quantize-bits", type=int, default=16,
                     help="uplink quantization width (paper: 16; >=32 "
                          "disables quantization)")
     ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="checkpoint every N rounds (0 = final only); "
+                         "writes overlap the next dispatch")
     ap.add_argument("--distributed", action="store_true",
                     help="multi-host TPU: call jax.distributed.initialize")
     args = ap.parse_args()
     fuse = max(1, args.fuse_rounds)
-    if args.rounds % fuse:
-        ap.error(f"--rounds {args.rounds} must be a multiple of "
-                 f"--fuse-rounds {fuse}")
 
     if args.distributed:
         jax.distributed.initialize()
@@ -62,24 +131,35 @@ def main():
     mesh = make_mesh((args.data_dim, args.model_dim), ("data", "model"))
     mesh_cfg = MeshConfig()
     shape = ShapeConfig("train_cli", args.seq_len, args.batch, "train")
-    step, abstract_args = steps_mod.build_train_step(
-        cfg, shape, mesh, mesh_cfg, schedule=args.schedule,
-        fuse_rounds=fuse,
-        pcfg_overrides={"quantize_bits": args.quantize_bits})
+
+    # per-chunk-length compile cache (the engine._chunk_fn pattern): the
+    # remainder chunk reuses everything but the scan length
+    step_cache: dict = {}
+
+    def get_step(length: int):
+        if length not in step_cache:
+            step_cache[length] = steps_mod.build_train_step(
+                cfg, shape, mesh, mesh_cfg, schedule=args.schedule,
+                fuse_rounds=length, layout=args.layout,
+                pcfg_overrides={"quantize_bits": args.quantize_bits})
+        return step_cache[length]
+
+    _, abstract_args = get_step(min(fuse, args.rounds) or 1)
 
     # materialize real inputs matching the abstract specs
     k_dev = args.data_dim
     n_k = args.batch // k_dev
     toks, _ = make_token_dataset(args.batch, args.seq_len, cfg.vocab)
-    batch = {"tokens": jnp.asarray(
-        toks.reshape(k_dev, n_k, args.seq_len))}
+    tokens = jnp.asarray(toks.reshape(k_dev, n_k, args.seq_len))
+    batch = {"tokens": tokens}
     state_abs = abstract_args[0]
-    if "enc_feats" in abstract_args[1]:
+    if args.layout == "stacked" and "enc_feats" in abstract_args[1]:
         ef = abstract_args[1]["enc_feats"]
         batch["enc_feats"] = jnp.zeros(ef.shape, ef.dtype)
 
     # real init (the dry-run uses ShapeDtypeStructs; here we train)
     from repro.core import protocol
+    from repro.core.jax_scheduling import JaxScheduler
     from repro.models import gan as gan_model
     pcfg = ProtocolConfig(n_devices=k_dev, n_d=2, n_g=2, sample_size=n_k,
                           server_sample_size=k_dev, schedule=args.schedule)
@@ -89,28 +169,49 @@ def main():
     state = jax.tree.map(
         lambda x, a: jnp.asarray(x, a.dtype), state, state_abs)
     weights = jnp.full((k_dev,), float(n_k))
+    key = jax.random.PRNGKey(0)
+    sched_carry = JaxScheduler(policy="all", n_devices=k_dev).init_carry()
+
+    ckpt = AsyncCheckpointer(args.ckpt_dir) if args.ckpt_dir else None
+    since_ckpt = 0
+    wall_total = 0.0
 
     with use_mesh(mesh):
-        for r in range(0, args.rounds, fuse):
+        r = 0
+        for chunk in chunk_lengths(args.rounds, fuse):
             t0 = time.time()
-            state, metrics = step(state, batch, weights, jnp.int32(r))
-            jax.block_until_ready(metrics)
-            dt = time.time() - t0
-            if fuse == 1:
-                print(f"round {r}: disc_obj="
-                      f"{float(metrics['disc_objective']):+.4f} "
-                      f"gen_obj={float(metrics['gen_objective']):+.4f} "
-                      f"({dt:.2f}s)")
+            step, _ = get_step(chunk)
+            if args.layout == "mesh":
+                state, sched_carry, out = step(state, sched_carry, tokens,
+                                               key, jnp.int32(r))
+                metrics = out["metrics"]
+                jax.block_until_ready(metrics)
+                wall_total += float(np.asarray(out["wallclock_s"]).sum())
             else:
-                d = np.asarray(metrics["disc_objective"])
-                g = np.asarray(metrics["gen_objective"])
-                print(f"rounds {r}..{r + fuse - 1}: disc_obj="
-                      f"{d[-1]:+.4f} gen_obj={g[-1]:+.4f} "
-                      f"({dt:.2f}s, {fuse / dt:.1f} rounds/s)")
+                state, metrics = step(state, batch, weights, jnp.int32(r))
+                jax.block_until_ready(metrics)
+            dt = time.time() - t0
+            d = np.atleast_1d(np.asarray(metrics["disc_objective"]))
+            g = np.atleast_1d(np.asarray(metrics["gen_objective"]))
+            label = (f"round {r}" if chunk == 1 else
+                     f"rounds {r}..{r + chunk - 1}")
+            extra = (f" sim_wall={wall_total:.1f}s"
+                     if args.layout == "mesh" else "")
+            print(f"{label}: disc_obj={d[-1]:+.4f} gen_obj={g[-1]:+.4f} "
+                  f"({dt:.2f}s, {chunk / dt:.1f} rounds/s){extra}")
+            r += chunk
+            since_ckpt += chunk
+            if ckpt and args.ckpt_every and since_ckpt >= args.ckpt_every \
+                    and r < args.rounds:
+                # device-copy now, write in the background while the
+                # next chunk runs on the donated live buffers
+                ckpt.submit(r, state, metadata={"layout": args.layout})
+                since_ckpt = 0
 
-    if args.ckpt_dir:
-        from repro.checkpoint import save_checkpoint
-        save_checkpoint(args.ckpt_dir, args.rounds, state)
+    if ckpt:
+        ckpt.finish()
+        ckpt.submit(args.rounds, state, metadata={"layout": args.layout})
+        ckpt.finish()
         print(f"saved {args.ckpt_dir}")
 
 

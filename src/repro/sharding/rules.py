@@ -193,6 +193,29 @@ def enc_feats_spec(cfg: ArchConfig, mesh, plan: ParallelismPlan):
 
 
 # ---------------------------------------------------------------------------
+# shard_map (mesh-layout) specs — explicit-collective protocol rounds
+# ---------------------------------------------------------------------------
+
+def tree_specs(tree, spec_leaf: P):
+    """Broadcast one PartitionSpec over every leaf of `tree` (None leaves
+    included, as optimizer states may carry them)."""
+    return jax.tree.map(lambda _: spec_leaf, tree,
+                        is_leaf=lambda x: x is None)
+
+
+def shard_round_state_specs(state, device_axes) -> dict:
+    """shard_map in/out specs for the protocol TrainState under the mesh
+    layout: gen/disc/gen_opt are replicated (the server is shared-seed
+    replicated computation), disc_opt is stacked over the device axes
+    (each slice IS one of the paper's K devices)."""
+    stacked, rep = P(device_axes), P()
+    return {"gen": tree_specs(state["gen"], rep),
+            "disc": tree_specs(state["disc"], rep),
+            "gen_opt": tree_specs(state["gen_opt"], rep),
+            "disc_opt": tree_specs(state["disc_opt"], stacked)}
+
+
+# ---------------------------------------------------------------------------
 # Serving (cache) shardings
 # ---------------------------------------------------------------------------
 

@@ -1,5 +1,7 @@
 import os
+import subprocess
 import sys
+import textwrap
 
 # NOTE: do NOT set --xla_force_host_platform_device_count here — smoke
 # tests and benches must see 1 device (per the dry-run contract). Tests
@@ -9,3 +11,19 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 
 jax.config.update("jax_enable_x64", False)
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def run_on_host_mesh(code: str, n_devices: int = 8, timeout: int = 560):
+    """Run `code` in a subprocess with a forced n-device host platform
+    (the multi-device test harness — see the NOTE above for why the
+    main pytest process must keep the single-device view)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=timeout)
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-4000:]}"
+    return out.stdout

@@ -174,6 +174,148 @@ class TestFedganFusedVsHost:
         assert wall["fedgan", 8] < wall["fedgan", 16]
 
 
+class TestTrainerCheckpointResume:
+    """Satellite: `Trainer.save_checkpoint`/`restore` serialize
+    `_round_index`, `_clock`, and the scheduler carry alongside params,
+    so a resumed fused run continues masks, params, AND the wallclock
+    curve exactly."""
+
+    def test_fused_save_restore_continues_exactly(self, tmp_path):
+        kw = dict(scheduler="round_robin", ratio=0.5)
+        ta = make_trainer("fused", **kw)
+        ta.run(3)
+        ta.save_checkpoint(str(tmp_path))
+        tb = make_trainer("fused", **kw)
+        assert tb.restore(str(tmp_path)) == 3
+        tb.run(3)
+        tc = make_trainer("fused", **kw)
+        tc.run(6)
+        for a, b in zip(jax.tree_util.tree_leaves(tb.state),
+                        jax.tree_util.tree_leaves(tc.state)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert tb._clock == tc._clock
+        assert_histories_match(tc.history[3:], tb.history, wallclock=True)
+        # resumed records continue the cumulative wallclock curve exactly
+        for rb, rc in zip(tb.history, tc.history[3:]):
+            assert rb.cumulative_s == rc.cumulative_s
+
+    def test_restore_resumes_scheduler_carry(self, tmp_path):
+        """round_robin cursor must survive the round-trip (a fresh carry
+        would restart the rotation and change the masks)."""
+        kw = dict(scheduler="round_robin", ratio=0.5)
+        ta = make_trainer("fused", **kw)
+        ta.run(1)                      # cursor now mid-rotation
+        ta.save_checkpoint(str(tmp_path))
+        tb = make_trainer("fused", **kw)
+        tb.restore(str(tmp_path))
+        assert int(tb._sched_carry["rr_cursor"]) == \
+            int(ta._sched_carry["rr_cursor"]) != 0
+
+
+class TestMeshLayoutSelection:
+    """Fast-lane validation of the layout axis (construction only — the
+    8-device execution matrix runs in the mesh lane below)."""
+
+    def test_unknown_layout_raises(self):
+        with pytest.raises(ValueError, match="layout"):
+            Trainer(SPEC, ProtocolConfig(n_devices=K),
+                    lambda k: dcgan.gan_init(k, CFG), DATA, KEY,
+                    layout="warp")
+
+    def test_mesh_layout_rejects_non_proposed(self):
+        for algorithm in ("fedgan", "centralized"):
+            with pytest.raises(ValueError, match="mesh"):
+                Trainer(SPEC, ProtocolConfig(n_devices=K),
+                        lambda k: dcgan.gan_init(k, CFG), DATA, KEY,
+                        algorithm=algorithm, layout="mesh")
+
+
+class TestMeshFusedEquivalence:
+    """Satellite: mesh-fused vs stacked-fused vs host equivalence matrix
+    (schedules x quantize_bits) on a forced 8-device host mesh. The
+    whole matrix runs in ONE subprocess (the jax startup dominates);
+    masks must agree BITWISE across all three drivers and params to
+    float32 tolerance. Runs in CI's mesh lane."""
+
+    @pytest.mark.slow
+    def test_mesh_matrix_and_resume_on_8_device_mesh(self):
+        from conftest import run_on_host_mesh
+        run_on_host_mesh("""
+            import itertools, tempfile
+            import jax, jax.numpy as jnp, numpy as np
+            from repro.configs.base import ProtocolConfig
+            from repro.configs.dcgan import DCGANConfig
+            from repro.core import Trainer
+            from repro.core.channel import ChannelConfig
+            from repro.models import dcgan
+            from repro.models.specs import make_dcgan_spec
+
+            KEY = jax.random.PRNGKey(0)
+            CFG = DCGANConfig(nz=8, ngf=8, ndf=8, nc=1, image_size=8)
+            SPEC = make_dcgan_spec(CFG)
+            K = 8
+            DATA = jax.random.normal(jax.random.PRNGKey(9),
+                                     (K, 8, 8, 8, 1))
+
+            def make(driver, layout, schedule, bits):
+                pcfg = ProtocolConfig(
+                    n_devices=K, n_d=1, n_g=1, sample_size=4,
+                    server_sample_size=4, lr_d=1e-3, lr_g=1e-3,
+                    schedule=schedule, scheduler="round_robin",
+                    scheduling_ratio=0.5, quantize_bits=bits)
+                chan = ChannelConfig(n_devices=K, seed=3, fading=False)
+                return Trainer(SPEC, pcfg,
+                               lambda k: dcgan.gan_init(k, CFG), DATA,
+                               KEY, channel_cfg=chan, driver=driver,
+                               layout=layout)
+
+            def leaves(t):
+                return jax.tree_util.tree_leaves(t.state)
+
+            for schedule, bits in itertools.product(
+                    ("serial", "parallel"), (16, 32)):
+                th = make("host", "stacked", schedule, bits)
+                ts = make("fused", "stacked", schedule, bits)
+                tm = make("fused", "mesh", schedule, bits)
+                h, s, m = th.run(4), ts.run(4), tm.run(4)
+                for rh, rs, rm in zip(h, s, m):
+                    np.testing.assert_array_equal(rh.mask, rs.mask)
+                    np.testing.assert_array_equal(rh.mask, rm.mask)
+                    for k in rh.metrics:
+                        assert abs(rh.metrics[k] - rm.metrics[k]) < 1e-4
+                    np.testing.assert_allclose(rh.wallclock_s,
+                                               rm.wallclock_s, rtol=1e-5)
+                for a, b in zip(leaves(th), leaves(tm)):
+                    np.testing.assert_allclose(
+                        np.asarray(a, np.float32),
+                        np.asarray(b, np.float32), atol=2e-5)
+                for a, b in zip(leaves(ts), leaves(tm)):
+                    np.testing.assert_allclose(
+                        np.asarray(a, np.float32),
+                        np.asarray(b, np.float32), atol=2e-5)
+                print(f"matrix OK schedule={schedule} bits={bits}")
+
+            # resumed mesh run continues the wallclock curve exactly
+            d = tempfile.mkdtemp()
+            ta = make("fused", "mesh", "serial", 16)
+            ta.run(2)
+            ta.save_checkpoint(d)
+            tb = make("fused", "mesh", "serial", 16)
+            tb.restore(d)
+            tb.run(2)
+            tc = make("fused", "mesh", "serial", 16)
+            tc.run(4)
+            for a, b in zip(leaves(tb), leaves(tc)):
+                np.testing.assert_array_equal(np.asarray(a),
+                                              np.asarray(b))
+            assert tb._clock == tc._clock
+            for rb, rc in zip(tb.history, tc.history[2:]):
+                assert rb.cumulative_s == rc.cumulative_s
+                np.testing.assert_array_equal(rb.mask, rc.mask)
+            print("mesh resume OK")
+        """)
+
+
 class TestDriverSelection:
     """Regression for the silent driver coercion fixed in PR 2:
     requesting the fused driver for an unsupported algorithm raises."""

@@ -33,6 +33,32 @@ class TestWavg:
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                    atol=1e-5)
 
+    @pytest.mark.parametrize("n", [1, 2047, 2048, 2049, 4096, 4097])
+    def test_padded_output_slicing_at_block_edges(self, n):
+        """The wrapper pads N up to BLOCK_N and slices the kernel output
+        back to n — exact at 1 element, exactly-BLOCK_N, and BLOCK_N+1
+        (and the 2-block edges), with no padding garbage leaking in."""
+        from repro.kernels.wavg.kernel import BLOCK_N
+        from repro.kernels.wavg.ops import weighted_average
+        from repro.kernels.wavg.ref import wavg_ref
+        assert BLOCK_N == 2048, "parametrization assumes BLOCK_N=2048"
+        k = 4
+        x = jax.random.normal(KEY, (k, n))
+        w = jax.random.uniform(jax.random.PRNGKey(1), (k,))
+        w = w / w.sum()
+        out = weighted_average(x, w, interpret=True)
+        assert out.shape == (n,)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(wavg_ref(x, w)), atol=1e-5)
+
+    def test_single_device_row(self):
+        """K=1 (one mesh slice's contribution) must reduce to w*x."""
+        from repro.kernels.wavg.ops import weighted_average
+        x = jax.random.normal(KEY, (1, 37))
+        out = weighted_average(x, jnp.ones(1), interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(x[0]),
+                                   atol=1e-6)
+
     def test_matches_protocol_averaging(self):
         """The kernel path must agree with core.averaging (impl='jnp')."""
         from repro.core.averaging import weighted_average as core_avg
@@ -41,6 +67,34 @@ class TestWavg:
         w = jnp.asarray([1.0, 2.0, 0.0, 4.0, 1.5])
         ref = core_avg(tree, w, impl="jnp")
         out = core_avg(tree, w, impl="pallas")
+        for a, b in zip(jax.tree_util.tree_leaves(ref),
+                        jax.tree_util.tree_leaves(out)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-5)
+
+    def test_psum_pallas_flat_path_matches_jnp(self):
+        """weighted_average_psum impl='pallas' (flat all-gather + one
+        kernel, the mesh-round hot path) == the per-leaf psum impl, on a
+        1-slice shard_map so the fast lane covers it without a forced
+        multi-device host."""
+        from repro.core.averaging import weighted_average_psum
+        from repro.core.shard_round import _shard_map
+        from repro.launch.mesh import make_host_mesh
+        from jax.sharding import PartitionSpec as P
+
+        mesh = make_host_mesh(1, 1)
+        tree = {"a": jax.random.normal(KEY, (6, 5)),
+                "b": {"c": jax.random.normal(KEY, (3, 2, 4))}}
+        w = jnp.float32(4.0)
+        specs = jax.tree.map(lambda _: P(), tree)
+
+        def run(impl):
+            body = lambda t, lw: weighted_average_psum(
+                t, lw, axis_names=("data",), impl=impl)
+            return _shard_map(body, mesh=mesh, in_specs=(specs, P()),
+                              out_specs=specs)(tree, w)
+
+        ref, out = run("jnp"), run("pallas")
         for a, b in zip(jax.tree_util.tree_leaves(ref),
                         jax.tree_util.tree_leaves(out)):
             np.testing.assert_allclose(np.asarray(a), np.asarray(b),

@@ -1,25 +1,9 @@
 """Multi-device host-mesh tests, run in subprocesses so the main pytest
 process keeps the default single-device view (per the dry-run contract,
 XLA_FLAGS must not be set globally)."""
-import os
-import subprocess
-import sys
-import textwrap
-
 import pytest
 
-ROOT = os.path.join(os.path.dirname(__file__), "..")
-
-
-def run_sub(code: str, n_devices: int = 8, timeout: int = 560):
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
-    env["PYTHONPATH"] = os.path.join(ROOT, "src")
-    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                         capture_output=True, text=True, env=env,
-                         timeout=timeout)
-    assert out.returncode == 0, f"stderr:\n{out.stderr[-4000:]}"
-    return out.stdout
+from conftest import run_on_host_mesh as run_sub
 
 
 @pytest.mark.slow
@@ -104,6 +88,59 @@ def test_mini_dryrun_train_and_decode_lower_on_mesh():
         with use_mesh(mesh):
             compiled = step.lower(*args).compile()
         print('prefill lowers OK')
+    """)
+
+
+@pytest.mark.slow
+def test_mesh_layout_train_step_executes():
+    """launch/steps.build_train_step(layout='mesh'): the fused shard_map
+    rounds-scan executes on a real 8-device mesh, including a shorter
+    remainder chunk through a second compile (any round count works)."""
+    run_sub("""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_arch_config
+        from repro.configs.base import MeshConfig, ShapeConfig
+        from repro.core import protocol
+        from repro.launch import steps as steps_mod
+        from repro.launch.mesh import make_mesh, use_mesh
+        from repro.models import gan as gan_model
+
+        cfg = dataclasses.replace(get_arch_config('qwen3-1.7b').reduced(),
+                                  vocab=256)
+        mesh = make_mesh((8, 1), ('data', 'model'))
+        shape = ShapeConfig('mesh_train', 16, 16, 'train')
+        over = {'n_d': 1, 'n_g': 1}
+        step2, args = steps_mod.build_train_step(
+            cfg, shape, mesh, MeshConfig(), fuse_rounds=2, layout='mesh',
+            pcfg_overrides=over)
+        step1, _ = steps_mod.build_train_step(
+            cfg, shape, mesh, MeshConfig(), fuse_rounds=1, layout='mesh',
+            pcfg_overrides=over)
+        state_abs, carry_abs, tokens_abs, key_abs, _ = args
+        from repro.configs.base import ProtocolConfig
+        pcfg = ProtocolConfig(n_devices=8, sample_size=2,
+                              server_sample_size=8)
+        state = protocol.make_train_state(
+            jax.random.PRNGKey(0), lambda k: gan_model.gan_init(k, cfg),
+            pcfg, 8)
+        state = jax.tree.map(lambda x, a: jnp.asarray(x, a.dtype), state,
+                             state_abs)
+        carry = {'rr_cursor': jnp.int32(0),
+                 'ewma_rate': jnp.ones(8, jnp.float32)}
+        assert jax.eval_shape(lambda: carry) == carry_abs
+        tokens = jnp.zeros(tokens_abs.shape, tokens_abs.dtype)
+        key = jax.random.PRNGKey(0)
+        with use_mesh(mesh):
+            state, carry, out = step2(state, carry, tokens, key,
+                                      jnp.int32(0))
+            state, carry, out2 = step1(state, carry, tokens, key,
+                                       jnp.int32(2))   # remainder chunk
+        assert out['wallclock_s'].shape == (2,)
+        assert out2['mask'].shape == (1, 8)
+        for leaf in jax.tree_util.tree_leaves(state):
+            assert bool(jnp.isfinite(leaf.astype(jnp.float32)).all())
+        print('mesh layout train step OK')
     """)
 
 
