@@ -5,11 +5,13 @@ paper-default 16-bit quantized uplink.
   --layout stacked (default): the per-round host loop vs the fused
       `protocol.rounds_scan`, for both fused algorithms (proposed +
       FedGAN). Runs on a single device.
-  --layout mesh: the per-round `shard_map_round` dispatch (host
-      scheduling, one XLA dispatch per round) vs the fused
-      `shard_round.shard_rounds_scan` (R rounds inside ONE shard_map
-      dispatch). Requires >= K addressable devices, e.g.
-      XLA_FLAGS=--xla_force_host_platform_device_count=8.
+  --layout mesh: the per-round shard_map dispatch (host scheduling, one
+      XLA dispatch per round) vs the fused in-shard_map scan (R rounds
+      inside ONE dispatch) — `shard_round.shard_rounds_scan` for the
+      proposed protocol and `shard_round.fedgan_shard_rounds_scan` for
+      FedGAN, so BENCH_driver.json records fused-vs-per-round speedup
+      for both algorithms on both layouts. Requires >= K addressable
+      devices, e.g. XLA_FLAGS=--xla_force_host_platform_device_count=8.
 
 The fused driver's win is everything per-round dispatch pays — dispatch
 latency, weight/metrics host sync, numpy scheduling — so the bench runs
@@ -149,15 +151,12 @@ def main(argv=None):
     n_rounds = args.rounds or (20 if args.smoke else N_ROUNDS)
 
     if args.layout == "mesh":
-        if len(jax.devices()) < K:
-            print(f"FAIL: --layout mesh needs >= {K} devices, have "
-                  f"{len(jax.devices())} (set XLA_FLAGS="
-                  f"--xla_force_host_platform_device_count={K})",
-                  file=sys.stderr)
+        from repro.launch.mesh import devices_error
+        err = devices_error(K)
+        if err:
+            print(f"FAIL: {err}", file=sys.stderr)
             return 2
-        algorithms = ("proposed",)      # shard_round: proposed only
-    else:
-        algorithms = ("proposed", "fedgan")
+    algorithms = ("proposed", "fedgan")   # both layouts run both
 
     results = {alg: bench_pair(alg, n_rounds, args.layout)
                for alg in algorithms}

@@ -71,7 +71,9 @@ def fmt_bench_section():
     files = {
         "fig3_schedules": "Fig. 3 — serial vs parallel schedule, 3 datasets",
         "fig4_devices": "Fig. 4 — device count vs centralized",
-        "fig5_fedgan": "Fig. 5 — proposed vs FedGAN",
+        # fig5 writes one curves file per execution layout
+        "fig5_fedgan_stacked": "Fig. 5 — proposed vs FedGAN (stacked)",
+        "fig5_fedgan_mesh": "Fig. 5 — proposed vs FedGAN (mesh)",
         "fig6_scheduling": "Fig. 6 — scheduling ratio under stragglers",
     }
     for stem, title in files.items():

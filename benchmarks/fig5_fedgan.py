@@ -6,38 +6,74 @@ Both algorithms run the FUSED driver (PR 2: FedGAN shares the unified
 `rounds_scan` engine) with the paper's 16-bit quantized uplink
 exercised per round; the trailing rows ablate the uplink bit width,
 which shrinks simulated upload time for both algorithms.
+
+--layout selects the execution layout for EVERY setting (no silent
+stacked assumption): layout="mesh" runs both algorithms through the
+fused shard_map engine (`shard_round.shard_rounds_scan` /
+`fedgan_shard_rounds_scan`) and needs >= K addressable devices, e.g.
+XLA_FLAGS=--xla_force_host_platform_device_count=8 with --devices 8.
+--smoke shrinks to one proposed + one FedGAN setting (CI smoke; round
+count still via REPRO_BENCH_ROUNDS).
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
 import time
 
 from benchmarks.common import run_experiment, last_fid, emit_csv_row
 
+SETTINGS = [("proposed-serial", "proposed", "serial", 16),
+            ("proposed-parallel", "proposed", "parallel", 16),
+            ("fedgan", "fedgan", "serial", 16),
+            ("proposed-serial-8bit", "proposed", "serial", 8),
+            ("fedgan-8bit", "fedgan", "serial", 8)]
 
-def main(out_dir="results/bench"):
+
+def main(out_dir="results/bench", layout="stacked", k=10, smoke=False):
     os.makedirs(out_dir, exist_ok=True)
     curves = []
-    settings = [("proposed-serial", "proposed", "serial", 16),
-                ("proposed-parallel", "proposed", "parallel", 16),
-                ("fedgan", "fedgan", "serial", 16),
-                ("proposed-serial-8bit", "proposed", "serial", 8),
-                ("fedgan-8bit", "fedgan", "serial", 8)]
+    settings = SETTINGS
+    if smoke:   # one setting per algorithm keeps CI smoke cheap
+        settings = [SETTINGS[0], SETTINGS[2]]
     for label, algorithm, schedule, bits in settings:
         t0 = time.time()
         c = run_experiment(f"fig5/{label}", dataset="celeba",
                            algorithm=algorithm, schedule=schedule,
-                           bits=bits)
+                           bits=bits, layout=layout, k=k)
         dt = (time.time() - t0) * 1e6 / max(len(c.rounds), 1)
         curves.append(c)
-        emit_csv_row(f"fig5_{label}", dt,
+        emit_csv_row(f"fig5_{label}_{layout}", dt,
                      f"final_fid={last_fid(c):.2f};"
                      f"wallclock={c.wallclock[-1]:.1f}s")
-    with open(os.path.join(out_dir, "fig5_fedgan.json"), "w") as f:
+    with open(os.path.join(out_dir, f"fig5_fedgan_{layout}.json"),
+              "w") as f:
         json.dump([c.as_dict() for c in curves], f, indent=2)
     return curves
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="results/bench")
+    ap.add_argument("--layout", choices=["stacked", "mesh"],
+                    default="stacked",
+                    help="execution layout for every setting (mesh "
+                         "needs >= --devices addressable devices)")
+    ap.add_argument("--devices", type=int, default=10,
+                    help="fleet size K (the paper's 10)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="one proposed + one FedGAN setting only")
+    args = ap.parse_args()
+    if args.layout == "mesh":
+        from repro.launch.mesh import devices_error
+        err = devices_error(args.devices)
+        if err:
+            sys.exit(err)
+    main(args.out_dir, layout=args.layout, k=args.devices,
+         smoke=args.smoke)

@@ -3,9 +3,15 @@ on the same fleet, data, and channel — miniature of the paper's Fig. 5.
 
 Both algorithms run the fused multi-round driver (one XLA dispatch for
 the whole run, FID evaluated in-scan) with the paper's 16-bit quantized
-uplink; --bits ablates the uplink width, --driver pins a driver.
+uplink; --bits ablates the uplink width, --driver pins a driver, and
+--layout selects the execution layout for BOTH algorithms — the full
+layout x algorithm matrix runs this comparison (no silent stacked
+assumption):
 
     PYTHONPATH=src python examples/fedgan_compare.py --rounds 12
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+    PYTHONPATH=src python examples/fedgan_compare.py --layout mesh \\
+        --devices 8
 """
 import argparse
 import os
@@ -26,15 +32,16 @@ from repro.models import dcgan
 from repro.models.specs import make_dcgan_spec
 
 
-def run(algorithm, schedule, rounds, driver, bits):
+def run(algorithm, schedule, rounds, driver, bits, layout="stacked",
+        devices=10, data_size=640):
     cfg = DCGANConfig(nz=32, ngf=16, ndf=16, nc=3, image_size=32)
     spec = make_dcgan_spec(cfg, gen_loss_variant="nonsaturating")
-    pcfg = ProtocolConfig(n_devices=10, n_d=2, n_g=2, sample_size=16,
+    pcfg = ProtocolConfig(n_devices=devices, n_d=2, n_g=2, sample_size=16,
                           server_sample_size=16, lr_d=2e-4, lr_g=2e-4,
                           schedule=schedule, optimizer="adam",
                           quantize_bits=bits)
-    imgs, _ = make_image_dataset("celeba32", 640)
-    shards = jnp.asarray(partition(imgs, 10))
+    imgs, _ = make_image_dataset("celeba32", data_size)
+    shards = jnp.asarray(partition(imgs, devices))
     feat = make_feature_extractor(cfg.nc)
     real_mu, real_cov = feature_stats_jnp(feat(jnp.asarray(imgs[:512])))
 
@@ -46,7 +53,8 @@ def run(algorithm, schedule, rounds, driver, bits):
 
     tr = Trainer(spec, pcfg, lambda k: dcgan.gan_init(k, cfg), shards,
                  jax.random.PRNGKey(0), algorithm=algorithm,
-                 disc_step_flops=1e10, gen_step_flops=1e10, driver=driver)
+                 disc_step_flops=1e10, gen_step_flops=1e10, driver=driver,
+                 layout=layout)
     hist = tr.run(rounds, eval_every=rounds, fid_fn=fid_fn)
     payload_mbit = protocol.uplink_payload_bits(
         tr.state, pcfg, fedgan=algorithm == "fedgan") / 1e6
@@ -61,12 +69,25 @@ def main():
     ap.add_argument("--bits", type=int, default=16,
                     help="uplink quantization width (paper: 16; >=32 "
                          "disables quantization)")
+    ap.add_argument("--layout", choices=["stacked", "mesh"],
+                    default="stacked",
+                    help="execution layout for both algorithms (mesh "
+                         "needs >= --devices addressable devices)")
+    ap.add_argument("--devices", type=int, default=10,
+                    help="fleet size K (the paper's 10)")
+    ap.add_argument("--data", type=int, default=640,
+                    help="dataset size (shrink for smoke runs)")
     args = ap.parse_args()
+    if args.layout == "mesh":
+        from repro.launch.mesh import devices_error
+        err = devices_error(args.devices)
+        if err:
+            sys.exit(err)
 
     prop, d1, mb1 = run("proposed", "serial", args.rounds, args.driver,
-                        args.bits)
+                        args.bits, args.layout, args.devices, args.data)
     fed, d2, mb2 = run("fedgan", "serial", args.rounds, args.driver,
-                       args.bits)
+                       args.bits, args.layout, args.devices, args.data)
     print(f"proposed-serial : FID={prop.fid:8.2f}  "
           f"wallclock={prop.cumulative_s:8.2f}s  "
           f"uplink={mb1:6.2f} Mbit/round/device  [{d1}]")

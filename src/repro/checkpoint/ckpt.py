@@ -2,6 +2,11 @@
 
 Round-resumable: the trainer state (params, optimizer moments, round
 counter, scheduler cursor) round-trips exactly. No external deps.
+
+bfloat16 leaves (the launch path's compute dtype) are stored as their
+uint16 bit pattern with a key marker — np.savez writes ml_dtypes
+arrays as raw void bytes that numpy cannot cast back, so the bit-level
+view is the only exact round-trip.
 """
 from __future__ import annotations
 
@@ -12,7 +17,13 @@ import re
 import jax
 import numpy as np
 
+try:  # ships with jax
+    from ml_dtypes import bfloat16 as _BF16
+except ImportError:  # pragma: no cover - jax always vendors ml_dtypes
+    _BF16 = None
+
 _SEP = "::"
+_BF16_MARK = "__bf16__"
 
 
 def _flatten(tree):
@@ -37,7 +48,11 @@ def _flatten(tree):
         elif node is None:
             mark(prefix, "__none__")
         else:
-            flat[prefix] = np.asarray(node)
+            arr = np.asarray(node)
+            if _BF16 is not None and arr.dtype == _BF16:
+                flat[f"{prefix}{_SEP}{_BF16_MARK}"] = arr.view(np.uint16)
+            else:
+                flat[prefix] = arr
 
     walk("", tree)
     return flat
@@ -48,7 +63,10 @@ def _unflatten(flat):
     list_marker = re.compile(r"^\[(\d+)\]$")
     for key in sorted(flat):
         parts = key.split(_SEP)
-        if parts[-1] == "__none__":
+        if parts[-1] == _BF16_MARK:
+            parts = parts[:-1]
+            value = flat[key].view(_BF16)
+        elif parts[-1] == "__none__":
             parts = parts[:-1]
             value = None
         elif parts[-1] == "__empty_dict__":

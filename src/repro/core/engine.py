@@ -2,45 +2,57 @@
 the wireless channel simulator, wall-clock accounting, and periodic
 evaluation. This is the paper's experimental harness (Figs 3-6).
 
-The round-execution stack has TWO orthogonal axes:
+The round-execution stack has THREE orthogonal axes — ALGORITHM x
+LAYOUT x DRIVER — and the matrix is COMPLETE for every combination
+that is meaningful:
+
+                    layout="stacked"          layout="mesh"
+  proposed       host + fused              host + fused
+  fedgan         host + fused              host + fused
+  centralized    host only                 — (no device structure)
 
 EXECUTION LAYOUT — how the paper's K devices map onto hardware:
 
   layout="stacked" (default) — devices are a stacked leading axis on
-      one logical device; vmap runs Algorithm 1 and Algorithm 2 is a
-      weighted mean over the axis (GSPMD lowers it to the all-reduce
-      when the axis is mesh-sharded through launch/steps.py).
+      one logical device; vmap runs the local updates and the averaging
+      is a weighted mean over the axis (GSPMD lowers it to the
+      all-reduce when the axis is mesh-sharded through launch/steps.py).
   layout="mesh" — devices are mesh slices under `jax.shard_map` with
-      explicit collectives (core.shard_round): Algorithm 1 touches no
-      collective, Algorithm 2 is one all-gather + the Pallas `wavg`
-      kernel per round, the server update is replicated shared-seed
-      computation. Requires >= K addressable devices (pass `mesh=` or
-      let the Trainer build a (K, 1) host mesh). Proposed protocol only.
+      explicit collectives (core.shard_round): local updates touch no
+      collective, the averaging is one all-gather + the Pallas `wavg`
+      kernel per round (both nets in ONE payload for FedGAN), and any
+      server math is replicated shared-seed computation. Requires >= K
+      addressable devices (pass `mesh=` or let the Trainer build a
+      (K, 1) host mesh).
 
 DRIVER — how rounds are dispatched:
 
   driver="fused" — chunks of R rounds run as ONE XLA dispatch
-      (`protocol.rounds_scan` on the stacked layout,
-      `shard_round.shard_rounds_scan` on the mesh layout): scheduling,
-      channel timing, the quantized uplink, the model math, and
-      wall-clock accounting all inside one `lax.scan`, state donated.
-      With a JITTABLE fid_fn, FID runs IN-SCAN via lax.cond; a
+      (`protocol.rounds_scan` / `fedgan.fedgan_rounds_scan` on the
+      stacked layout, `shard_round.shard_rounds_scan` /
+      `shard_round.fedgan_shard_rounds_scan` on the mesh layout):
+      scheduling, channel timing, the quantized uplink, the model math,
+      and wall-clock accounting all inside one `lax.scan`, state
+      donated. With a JITTABLE fid_fn, FID runs IN-SCAN via lax.cond; a
       non-traceable fid_fn falls back to eval-boundary chunking.
   driver="host" — one round per dispatch with numpy scheduling/channel
       state. On the stacked layout this is the original per-round loop,
       retained as the EQUIVALENCE ORACLE: the fused drivers (BOTH
-      layouts) must reproduce its masks bitwise and params/metrics to
-      float32 round-off (tests/test_driver_equivalence.py). On the mesh
-      layout it dispatches `shard_map_round` per round — the baseline
-      `benchmarks/driver_bench.py --layout mesh` measures fused speedup
-      against.
+      layouts, BOTH fused algorithms) must reproduce its masks bitwise
+      and params/metrics to float32 round-off
+      (tests/test_driver_equivalence.py). On the mesh layout it
+      dispatches the algorithm's single-round shard_map entry per round
+      — the baseline `benchmarks/driver_bench.py --layout mesh`
+      measures fused speedup against.
   driver="auto" (default) — fused where supported, host otherwise.
 
-The per-algorithm construction (state init, round function, fused scan
-entry) lives in the `_ALGORITHMS` strategy table instead of `__init__`
-branching; the centralized baseline has no fused path (its round has no
-scheduling/channel structure to fold), so requesting driver="fused" for
-it raises instead of silently running the host loop.
+The per-algorithm construction (state init, per-round host function,
+stacked fused scan, and the mesh single-round/fused-scan entries) lives
+in the `_ALGORITHMS` strategy table instead of `__init__` branching.
+Unsupported combinations RAISE instead of silently degrading: the
+centralized baseline has no fused path and no mesh layout (its round
+has no scheduling/channel/device structure to fold), so requesting
+either for it is a ValueError.
 
 CHECKPOINT/RESUME: `save_checkpoint`/`restore` serialize the model
 state together with `_round_index`, `_clock`, and the scheduler carry
@@ -71,10 +83,14 @@ from repro.core.scheduling import SchedulerState, schedule_round
 @dataclasses.dataclass(frozen=True)
 class _Algorithm:
     """Strategy record: how one algorithm builds state, its per-round
-    host function, and (when fused-capable) its stacked rounds-scan."""
+    host function, (when fused-capable) its stacked rounds-scan, and
+    (when mesh-capable) its shard_map single-round / fused-scan
+    entries."""
     make_state: Callable          # (key, init_fn, pcfg, n_devices) -> state
     round_fn: Callable            # (spec, pcfg) -> (s, d, w, k) -> (s, m)
     rounds_scan: Optional[Callable] = None   # unified stacked engine entry
+    mesh_round: Optional[Callable] = None    # (spec, pcfg, mesh, device_axes)
+    mesh_rounds_scan: Optional[Callable] = None  # fused mesh engine entry
     fedgan: bool = False
     pooled: bool = False          # centralized: pools the data shards
 
@@ -82,18 +98,26 @@ class _Algorithm:
     def fused(self) -> bool:
         return self.rounds_scan is not None
 
+    @property
+    def mesh(self) -> bool:
+        return self.mesh_round is not None
+
 
 _ALGORITHMS = {
     "proposed": _Algorithm(
         make_state=protocol.make_train_state,
         round_fn=lambda spec, pcfg: (
             lambda s, d, w, k: protocol.gan_round(spec, pcfg, s, d, w, k)),
-        rounds_scan=protocol.gan_rounds_scan),
+        rounds_scan=protocol.gan_rounds_scan,
+        mesh_round=shard_round.shard_map_round,
+        mesh_rounds_scan=shard_round.shard_rounds_scan),
     "fedgan": _Algorithm(
         make_state=fedgan.make_fedgan_state,
         round_fn=lambda spec, pcfg: (
             lambda s, d, w, k: fedgan.fedgan_round(spec, pcfg, s, d, w, k)),
         rounds_scan=fedgan.fedgan_rounds_scan,
+        mesh_round=shard_round.fedgan_shard_map_round,
+        mesh_rounds_scan=shard_round.fedgan_shard_rounds_scan,
         fedgan=True),
     "centralized": _Algorithm(
         make_state=lambda key, init_fn, pcfg, n: protocol.make_train_state(
@@ -105,7 +129,21 @@ _ALGORITHMS = {
 
 # Algorithms with a fused multi-round scan path (the unified engine).
 FUSED_ALGORITHMS = tuple(name for name, a in _ALGORITHMS.items() if a.fused)
+# Algorithms with a mesh (shard_map) execution layout.
+MESH_ALGORITHMS = tuple(name for name, a in _ALGORITHMS.items() if a.mesh)
 LAYOUTS = ("stacked", "mesh")
+
+
+def mesh_algorithm(name: str) -> _Algorithm:
+    """The strategy record for a mesh-capable algorithm — the ONE
+    registry the launch layer (launch/steps.py, launch/train.py) reuses
+    for state init and the fused mesh scan, so adding an algorithm here
+    reaches every layer without parallel per-algorithm tables."""
+    algo = _ALGORITHMS.get(name)
+    if algo is None or not algo.mesh:
+        raise ValueError(f"layout='mesh' supports algorithms "
+                         f"{MESH_ALGORITHMS} (got {name!r})")
+    return algo
 
 
 @dataclasses.dataclass
@@ -123,7 +161,7 @@ class Trainer:
     simulated device fleet. All model math is jitted; the fused driver
     additionally folds scheduling + channel timing into the same
     dispatch, while the host driver keeps them in numpy. See the module
-    docstring for the layout x driver matrix."""
+    docstring for the algorithm x layout x driver matrix."""
 
     def __init__(self, spec: protocol.GanModelSpec, pcfg: ProtocolConfig,
                  init_fn: Callable, data_stacked, key, *,
@@ -138,10 +176,11 @@ class Trainer:
         algo = _ALGORITHMS[algorithm]
         if layout not in LAYOUTS:
             raise ValueError(f"unknown layout {layout!r} (have {LAYOUTS})")
-        if layout == "mesh" and algorithm != "proposed":
+        if layout == "mesh" and not algo.mesh:
             raise ValueError(
-                f"layout='mesh' implements the proposed protocol only "
-                f"(got algorithm {algorithm!r}); use layout='stacked'")
+                f"layout='mesh' is not supported for algorithm "
+                f"{algorithm!r} (mesh algorithms: {MESH_ALGORITHMS}); "
+                f"use layout='stacked'")
         if driver not in ("auto", "fused", "host"):
             raise ValueError(f"unknown driver {driver!r}")
         if driver == "fused" and not algo.fused:
@@ -179,8 +218,8 @@ class Trainer:
                 from repro.launch.mesh import make_host_mesh
                 mesh = make_host_mesh(pcfg.n_devices, 1)
             self.mesh = mesh
-            self._round = shard_round.shard_map_round(
-                spec, pcfg, mesh, device_axes=device_axes)
+            self._round = algo.mesh_round(spec, pcfg, mesh,
+                                          device_axes=device_axes)
         else:
             self._round = jax.jit(algo.round_fn(spec, pcfg))
 
@@ -217,7 +256,7 @@ class Trainer:
     def _chunk_fn(self, n: int, eval_every: int = 0,
                   fid_fn: Optional[Callable] = None):
         """Chunk function over a fixed length n, per layout: the jitted
-        stacked `rounds_scan` or the mesh `shard_rounds_scan`, both with
+        stacked `rounds_scan` or the algorithm's mesh rounds-scan, with
         the signature (state, sched_carry, data, key, start_round) and
         donated state/carry. The start round is traced, so one compile
         serves every chunk of this length. With eval_every > 0 the
@@ -237,7 +276,7 @@ class Trainer:
             if eval_every:
                 eval_fn = lambda gen, t, key: fid_fn(
                     gen, jax.random.fold_in(key, 10_000 + t))
-            fn = shard_round.shard_rounds_scan(
+            fn = self._algo.mesh_rounds_scan(
                 spec, pcfg, self.mesh, n,
                 channel=self.jax_channel, scheduler=self.jax_sched,
                 device_axes=self.device_axes,

@@ -1,5 +1,6 @@
 """Mesh execution layout for protocol rounds: shard_map + explicit
-collectives, single-round and FUSED multi-round.
+collectives, single-round and FUSED multi-round, for EVERY mesh-capable
+algorithm (proposed protocol AND the FedGAN baseline).
 
 The round engine has two first-class execution layouts (see
 core/engine.py for the driver/layout matrix):
@@ -8,36 +9,58 @@ core/engine.py for the driver/layout matrix):
       vmap/GSPMD insert the averaging all-reduce (`protocol.gan_round`,
       `protocol.rounds_scan`).
   layout="mesh"    — THIS module: every mesh slice IS a device under
-      `jax.shard_map`. Local discriminator steps touch no collective
-      (Algorithm 1 is embarrassingly parallel), Algorithm 2 is an
-      explicit weighted reduction over the device axes, and the server
-      update is replicated shared-seed computation (the paper's single
-      server maps to identical per-slice generator math — no gradient
-      collective is needed because the shared noise makes every slice
-      compute the same update).
+      `jax.shard_map`. Local updates touch no collective (Algorithm 1,
+      and FedGAN's joint D+G local iterations, are embarrassingly
+      parallel), Algorithm-2-style averaging is an explicit weighted
+      reduction over the device axes, and any replicated server math is
+      shared-seed computation (identical per-slice results, no gradient
+      collective).
 
-Two entry points:
+The engine is ALGORITHM-PARAMETRIC: `_mesh_single_round` and
+`_mesh_rounds_scan` own all the layout plumbing — state (un)stacking,
+Step 1 scheduling + channel timing via `protocol.schedule_and_time`
+(per-round keys shared verbatim with the stacked engine, so masks agree
+bitwise across layouts), the wall-clock composition, the donated
+`lax.scan` dispatch, and the shard_map spec construction — while a
+per-slice ROUND BODY supplies the algorithm's Steps 2-5:
 
-  `shard_map_round`  — ONE round per dispatch (weights supplied by the
-      host). The per-round oracle of the mesh layout and the baseline
-      the §Perf hillclimb measures fused speedups against.
-  `shard_rounds_scan` — the fused engine on the mesh: R complete rounds
-      (Step 1 scheduling, channel timing, the quantized uplink keyed
-      identically to the stacked layout, Algorithm 2 via the Pallas
-      `wavg` kernel by default, and the Fig. 1/2 wall-clock composition)
-      run INSIDE shard_map as one `lax.scan` — one XLA dispatch per
-      chunk, donated state, same carry/out structure as
-      `protocol.rounds_scan`, so `engine.Trainer(layout="mesh")` drives
-      it through the unchanged fused driver.
+  `_proposed_slice_round` — Algorithm 1 local disc steps, the quantized
+      one-net uplink, Algorithm 2 over the device axes, the replicated
+      Algorithm 3 server update.
+  `_fedgan_slice_round`   — FedGAN's n_d local (disc, gen) iteration
+      pairs, the single TWO-NET quantized uplink payload (keyed exactly
+      like `fedgan_round`'s `roundtrip_stacked`, so both layouts
+      quantize bitwise-identically), and Algorithm-2-style averaging of
+      BOTH networks in one reduction.
 
-Equivalence contract (tests/test_driver_equivalence.py mesh matrix,
+Four entry points, two per algorithm:
+
+  `shard_map_round` / `fedgan_shard_map_round` — ONE round per dispatch
+      (weights supplied by the host). The per-round oracles of the mesh
+      layout and the baselines `benchmarks/driver_bench.py --layout
+      mesh` measures fused speedups against.
+  `shard_rounds_scan` / `fedgan_shard_rounds_scan` — the fused engines:
+      R complete rounds run INSIDE shard_map as one `lax.scan` — one
+      XLA dispatch per chunk, donated state, the same carry/out
+      structure as `protocol.rounds_scan`, so `engine.Trainer` drives
+      either through the unchanged fused driver.
+
+Algorithm 2 on the mesh defaults to
+`averaging.weighted_average_psum(impl="pallas")`: the local tree (both
+nets, for FedGAN) is flattened into ONE payload, all-gathered once, and
+reduced by the Pallas `wavg` kernel on the MXU (interpret mode on CPU)
+— one collective + one kernel per round instead of a per-leaf psum
+tree.
+
+Equivalence contract (tests/test_driver_equivalence.py mesh matrices,
 tests/test_multidevice.py): on a forced multi-device host mesh both
-layouts reproduce the host oracle's masks BITWISE (the per-round keys
-come from `protocol.schedule_and_time`, shared verbatim) and its
-params/metrics to float32 round-off.
+layouts of BOTH algorithms reproduce the host oracle's masks BITWISE
+(the per-round keys come from `protocol.schedule_and_time`, shared
+verbatim) and its params/metrics to float32 round-off.
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import Callable, Optional
 
 import jax
@@ -45,12 +68,22 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ProtocolConfig
+from repro.core import fedgan as fedgan_mod
 from repro.core import jax_channel, quantize
 from repro.core.protocol import (GanModelSpec, count_params, device_update,
                                  schedule_and_time, server_update,
                                  uplink_payload_bits)
 from repro.core.averaging import weighted_average_psum
 from repro.sharding import rules
+
+# Per-algorithm mesh conventions: which state entries carry a leading
+# per-device axis, and the metric names the slice round body returns
+# (they must match the host oracle's round function exactly, since the
+# equivalence tests compare metric dicts key-for-key).
+PROPOSED_STACKED_KEYS = ("disc_opt",)
+PROPOSED_METRICS = ("disc_objective", "gen_objective", "participation")
+FEDGAN_STACKED_KEYS = ("gen_opt", "disc_opt")
+FEDGAN_METRICS = ("participation",)
 
 
 def _shard_map(f, *, mesh, in_specs, out_specs):
@@ -64,18 +97,34 @@ def _shard_map(f, *, mesh, in_specs, out_specs):
                      check_rep=False)
 
 
-def _slice_round_body(spec: GanModelSpec, pcfg: ProtocolConfig, axis,
-                      avg_impl: str, my_index, gen, disc, gen_opt,
-                      disc_opt_k, data_k, w_k, weights, disc_objs_weight_sum,
-                      round_key):
-    """Steps 2-5 of one round as seen by ONE mesh slice (= one device).
+def _unstack_state(state, stacked_keys):
+    """Drop the local size-1 leading axis of the per-device entries."""
+    return {k: (jax.tree.map(lambda x: x[0], v) if k in stacked_keys else v)
+            for k, v in state.items()}
 
-    Shared by the single-round and fused entry points so both layouts of
-    the mesh path run literally the same per-round math.
-    Returns (gen, disc_avg, gen_opt, disc_opt_k, metrics).
+
+def _restack_state(state, stacked_keys):
+    """Re-add the local leading axis so out specs see the stacked shape."""
+    return {k: (jax.tree.map(lambda x: x[None], v) if k in stacked_keys
+                else v)
+            for k, v in state.items()}
+
+
+# ---------------------------------------------------------------------------
+# Per-slice round bodies (Steps 2-5, one algorithm each)
+# ---------------------------------------------------------------------------
+
+def _proposed_slice_round(spec: GanModelSpec, pcfg: ProtocolConfig, axis,
+                          avg_impl: str, my_index, st, data_k, w_k, weights,
+                          weight_sum, round_key):
+    """The proposed protocol's Steps 2-5 as seen by ONE mesh slice.
+
+    st: per-slice state {"gen", "disc", "gen_opt", "disc_opt"} (already
+    unstacked). Returns (new_st, metrics).
     """
     disc_k, disc_opt_k, disc_obj = device_update(
-        spec, pcfg, gen, disc, disc_opt_k, data_k, round_key, my_index)
+        spec, pcfg, st["gen"], st["disc"], st["disc_opt"], data_k,
+        round_key, my_index)
 
     # Step 3 — quantized uplink, keyed exactly as the stacked layout's
     # `roundtrip_stacked` (device index = this slice's axis index), so
@@ -91,33 +140,74 @@ def _slice_round_body(spec: GanModelSpec, pcfg: ProtocolConfig, axis,
     disc_avg = weighted_average_psum(disc_k, w_k, axis_names=axis,
                                      impl=avg_impl)
 
-    disc_for_gen = disc_avg if pcfg.schedule == "serial" else disc
-    gen, gen_opt, gen_obj = server_update(spec, pcfg, gen, gen_opt,
-                                          disc_for_gen, round_key)
+    disc_for_gen = disc_avg if pcfg.schedule == "serial" else st["disc"]
+    gen, gen_opt, gen_obj = server_update(spec, pcfg, st["gen"],
+                                          st["gen_opt"], disc_for_gen,
+                                          round_key)
 
     w = w_k.astype(jnp.float32)
-    wsum = jnp.maximum(disc_objs_weight_sum, 1e-12)
+    wsum = jnp.maximum(weight_sum, 1e-12)
     metrics = {
         "disc_objective": jax.lax.psum(disc_obj * w, axis) / wsum,
         "gen_objective": gen_obj,
         "participation": (weights > 0).astype(jnp.float32).mean(),
     }
-    return gen, disc_avg, gen_opt, disc_opt_k, metrics
+    new_st = {"gen": gen, "disc": disc_avg, "gen_opt": gen_opt,
+              "disc_opt": disc_opt_k}
+    return new_st, metrics
+
+
+def _fedgan_slice_round(spec: GanModelSpec, pcfg: ProtocolConfig, axis,
+                        avg_impl: str, my_index, st, data_k, w_k, weights,
+                        weight_sum, round_key):
+    """One FedGAN round as seen by ONE mesh slice: n_d local (disc, gen)
+    iteration pairs on the slice's shard, then the server's model-only
+    averaging of BOTH networks.
+
+    The uplink is the single two-net payload of `fedgan.fedgan_round`:
+    {"gen": ..., "disc": ...} quantized as ONE tree per device (one
+    stochastic-rounding draw over the concatenated payload), keyed by
+    `device_uplink_key(round_key, my_index)` — the same tree structure
+    and key `roundtrip_stacked` uses on the stacked layout, so both
+    layouts quantize bitwise-identically. Averaging reduces the same
+    combined tree in one `weighted_average_psum` call: with
+    impl="pallas" that is ONE all-gather + ONE wavg kernel for both
+    networks.
+    """
+    gen_k, disc_k, gen_opt_k, disc_opt_k = fedgan_mod.fedgan_device_update(
+        spec, pcfg, st["gen"], st["disc"], st["gen_opt"], st["disc_opt"],
+        data_k, round_key, my_index)
+
+    payload = {"gen": gen_k, "disc": disc_k}
+    if pcfg.quantize_bits < 32:
+        payload = quantize.roundtrip(
+            quantize.device_uplink_key(round_key, my_index), payload,
+            pcfg.quantize_bits)
+
+    avg = weighted_average_psum(payload, w_k, axis_names=axis,
+                                impl=avg_impl)
+    new_st = {"gen": avg["gen"], "disc": avg["disc"],
+              "gen_opt": gen_opt_k, "disc_opt": disc_opt_k}
+    metrics = {"participation": (weights > 0).astype(jnp.float32).mean()}
+    return new_st, metrics
 
 
 # ---------------------------------------------------------------------------
-# One round per dispatch (host-scheduled weights — the mesh oracle)
+# One round per dispatch (host-scheduled weights — the mesh oracles)
 # ---------------------------------------------------------------------------
 
-def shard_map_round(spec: GanModelSpec, pcfg: ProtocolConfig, mesh,
-                    device_axes=("data",)):
+def _mesh_single_round(slice_round_fn: Callable, stacked_keys, metric_names,
+                       mesh, device_axes, avg_impl: str):
     """Build a jitted single-round function over `mesh` with explicit
-    collectives. Expects state["disc_opt"]/data/weights stacked over the
-    device axes (leading K == prod of device-axis sizes).
+    collectives. Expects the `stacked_keys` state entries /data/weights
+    stacked over the device axes (leading K == prod of device-axis
+    sizes).
 
     The jitted shard_map closure is built once on first call and cached,
     so repeated per-round dispatches pay dispatch latency only — this is
-    the baseline `shard_rounds_scan` is benchmarked against.
+    the baseline the fused scans are benchmarked against. It runs the
+    SAME per-slice round math (including the averaging impl, pallas by
+    default), so the driver bench isolates pure dispatch overhead.
     """
     axis = device_axes
 
@@ -125,21 +215,13 @@ def shard_map_round(spec: GanModelSpec, pcfg: ProtocolConfig, mesh,
         # inside shard_map: leading stacked axis has local size 1
         my_index = jax.lax.axis_index(axis)
         data_k = jax.tree.map(lambda x: x[0], data_local)
-        disc_opt_k = jax.tree.map(lambda x: x[0], state["disc_opt"])
+        st = _unstack_state(state, stacked_keys)
         w_k = weight_local[0]
         weights = jax.lax.all_gather(w_k, axis)
         wsum = jax.lax.psum(w_k.astype(jnp.float32), axis)
-
-        gen, disc_avg, gen_opt, disc_opt_k, metrics = _slice_round_body(
-            spec, pcfg, axis, "jnp", my_index, state["gen"], state["disc"],
-            state["gen_opt"], disc_opt_k, data_k, w_k, weights, wsum,
-            round_key)
-
-        new_state = {
-            "gen": gen, "disc": disc_avg, "gen_opt": gen_opt,
-            "disc_opt": jax.tree.map(lambda x: x[None], disc_opt_k),
-        }
-        return new_state, metrics
+        new_st, metrics = slice_round_fn(avg_impl, my_index, st, data_k,
+                                         w_k, weights, wsum, round_key)
+        return _restack_state(new_st, stacked_keys), metrics
 
     stacked, rep = P(device_axes), P()
     cache = {}
@@ -147,15 +229,16 @@ def shard_map_round(spec: GanModelSpec, pcfg: ProtocolConfig, mesh,
     def run(state, data_stacked, weights, round_key):
         if "fn" not in cache:
             in_specs = (
-                rules.shard_round_state_specs(state, device_axes),
+                rules.shard_round_state_specs(state, device_axes,
+                                              stacked_keys),
                 rules.tree_specs(data_stacked, stacked),
                 stacked,
                 rep,
             )
             out_specs = (
-                rules.shard_round_state_specs(state, device_axes),
-                {"disc_objective": rep, "gen_objective": rep,
-                 "participation": rep},
+                rules.shard_round_state_specs(state, device_axes,
+                                              stacked_keys),
+                {name: rep for name in metric_names},
             )
             cache["fn"] = jax.jit(_shard_map(
                 round_body, mesh=mesh, in_specs=in_specs,
@@ -165,19 +248,38 @@ def shard_map_round(spec: GanModelSpec, pcfg: ProtocolConfig, mesh,
     return run
 
 
+def shard_map_round(spec: GanModelSpec, pcfg: ProtocolConfig, mesh,
+                    device_axes=("data",), avg_impl: str = "pallas"):
+    """Single proposed-protocol round per dispatch (the mesh oracle)."""
+    return _mesh_single_round(
+        partial(_proposed_slice_round, spec, pcfg, device_axes),
+        PROPOSED_STACKED_KEYS, PROPOSED_METRICS, mesh, device_axes,
+        avg_impl)
+
+
+def fedgan_shard_map_round(spec: GanModelSpec, pcfg: ProtocolConfig, mesh,
+                           device_axes=("data",),
+                           avg_impl: str = "pallas"):
+    """Single FedGAN round per dispatch (the mesh FedGAN oracle).
+    Expects gen_opt AND disc_opt stacked (every device trains both
+    nets)."""
+    return _mesh_single_round(
+        partial(_fedgan_slice_round, spec, pcfg, device_axes),
+        FEDGAN_STACKED_KEYS, FEDGAN_METRICS, mesh, device_axes, avg_impl)
+
+
 # ---------------------------------------------------------------------------
 # Fused multi-round scan INSIDE shard_map — R rounds per dispatch
 # ---------------------------------------------------------------------------
 
-def shard_rounds_scan(spec: GanModelSpec, pcfg: ProtocolConfig, mesh,
-                      n_rounds: int, *, channel, scheduler,
-                      device_axes=("data",), disc_step_flops: float = 1e9,
-                      gen_step_flops: float = 1e9,
-                      uplink_bits: Optional[int] = None,
-                      avg_impl: str = "pallas",
-                      eval_fn: Optional[Callable] = None,
-                      eval_every: int = 0):
-    """The unified fused round engine on the MESH layout.
+def _mesh_rounds_scan(slice_round_fn: Callable, stacked_keys, metric_names,
+                      pcfg: ProtocolConfig, mesh, n_rounds: int, *, channel,
+                      scheduler, device_axes, disc_step_flops: float,
+                      gen_step_flops: float, uplink_bits: Optional[int],
+                      avg_impl: str, fedgan: bool,
+                      eval_fn: Optional[Callable], eval_every: int):
+    """The unified fused round engine on the MESH layout, parametrized
+    by the algorithm's per-slice round body.
 
     Builds `run(state, sched_carry, data_stacked, key, start_round) ->
     (state, sched_carry, out)` — the exact chunk signature of the
@@ -188,14 +290,16 @@ def shard_rounds_scan(spec: GanModelSpec, pcfg: ProtocolConfig, mesh,
 
     Everything runs INSIDE shard_map: scheduling and channel timing are
     replicated per-slice computation (deterministic given the round key,
-    so every slice agrees without a collective), Algorithm 1 is local to
-    each slice, the quantized uplink uses the slice's axis index as its
-    device key, and Algorithm 2 is `weighted_average_psum` — by default
-    `impl="pallas"`: one all-gather of the flat payload + one Pallas
-    `wavg` kernel per round (interpret-mode on CPU hosts).
+    so every slice agrees without a collective), local updates touch no
+    collective, the quantized uplink uses the slice's axis index as its
+    device key, and the averaging is `weighted_average_psum` — by
+    default `impl="pallas"`: one all-gather of the flat payload + one
+    Pallas `wavg` kernel per round (interpret-mode on CPU hosts).
 
     channel:   core.jax_channel.JaxChannel over K = prod(device axes)
     scheduler: core.jax_scheduling.JaxScheduler
+    fedgan:    selects the FedGAN timing/wallclock composition and the
+        two-net default uplink payload size
     eval_fn:   optional JITTABLE (gen_params, t, key) -> scalar run
         in-scan via lax.cond on rounds where (t+1) % eval_every == 0
         (replicated — gen is replicated, so every slice evaluates the
@@ -206,14 +310,12 @@ def shard_rounds_scan(spec: GanModelSpec, pcfg: ProtocolConfig, mesh,
     def body(state, sched_carry, data_local, key, start_round):
         my_index = jax.lax.axis_index(axis)
         data_k = jax.tree.map(lambda x: x[0], data_local)
-        st = {"gen": state["gen"], "disc": state["disc"],
-              "gen_opt": state["gen_opt"],
-              "disc_opt": jax.tree.map(lambda x: x[0], state["disc_opt"])}
+        st = _unstack_state(state, stacked_keys)
         disc_nparams = count_params(st["disc"])
         gen_nparams = count_params(st["gen"])
         bits = uplink_bits
         if bits is None:
-            bits = uplink_payload_bits(st, pcfg, fedgan=False)
+            bits = uplink_payload_bits(st, pcfg, fedgan=fedgan)
 
         def round_body(carry, t):
             st, sc = carry
@@ -226,20 +328,17 @@ def shard_rounds_scan(spec: GanModelSpec, pcfg: ProtocolConfig, mesh,
                 pcfg, channel, scheduler, sc, round_key,
                 disc_nparams=disc_nparams, gen_nparams=gen_nparams,
                 disc_step_flops=disc_step_flops,
-                gen_step_flops=gen_step_flops, fedgan=False,
+                gen_step_flops=gen_step_flops, fedgan=fedgan,
                 uplink_bits=bits)
             w_k = weights[my_index]
-            wsum = jnp.maximum(weights.sum(), 1e-12)
 
-            gen, disc_avg, gen_opt, disc_opt_k, metrics = _slice_round_body(
-                spec, pcfg, axis, avg_impl, my_index, st["gen"], st["disc"],
-                st["gen_opt"], st["disc_opt"], data_k, w_k, weights, wsum,
-                round_key)
+            new_st, metrics = slice_round_fn(avg_impl, my_index, st,
+                                             data_k, w_k, weights,
+                                             weights.sum(), round_key)
 
             wall = jax_channel.round_wallclock(timing, mask,
-                                               schedule=pcfg.schedule)
-            new_st = {"gen": gen, "disc": disc_avg, "gen_opt": gen_opt,
-                      "disc_opt": disc_opt_k}
+                                               schedule=pcfg.schedule,
+                                               fedgan=fedgan)
             out = {"metrics": metrics, "wallclock_s": wall, "mask": mask,
                    "weights": weights}
             if eval_fn is not None and eval_every > 0:
@@ -254,21 +353,16 @@ def shard_rounds_scan(spec: GanModelSpec, pcfg: ProtocolConfig, mesh,
         rounds = jnp.asarray(start_round) + jnp.arange(n_rounds)
         (st, sched_carry), out = jax.lax.scan(round_body,
                                               (st, sched_carry), rounds)
-        new_state = {"gen": st["gen"], "disc": st["disc"],
-                     "gen_opt": st["gen_opt"],
-                     "disc_opt": jax.tree.map(lambda x: x[None],
-                                              st["disc_opt"])}
-        return new_state, sched_carry, out
+        return _restack_state(st, stacked_keys), sched_carry, out
 
     stacked, rep = P(device_axes), P()
     cache = {}
 
     def run(state, sched_carry, data_stacked, key, start_round):
         if "fn" not in cache:
-            state_specs = rules.shard_round_state_specs(state, device_axes)
-            out_round = {"metrics": {"disc_objective": rep,
-                                     "gen_objective": rep,
-                                     "participation": rep},
+            state_specs = rules.shard_round_state_specs(state, device_axes,
+                                                        stacked_keys)
+            out_round = {"metrics": {name: rep for name in metric_names},
                          "wallclock_s": rep, "mask": rep, "weights": rep}
             if eval_fn is not None and eval_every > 0:
                 out_round["fid"] = rep
@@ -288,3 +382,47 @@ def shard_rounds_scan(spec: GanModelSpec, pcfg: ProtocolConfig, mesh,
                            start_round)
 
     return run
+
+
+def shard_rounds_scan(spec: GanModelSpec, pcfg: ProtocolConfig, mesh,
+                      n_rounds: int, *, channel, scheduler,
+                      device_axes=("data",), disc_step_flops: float = 1e9,
+                      gen_step_flops: float = 1e9,
+                      uplink_bits: Optional[int] = None,
+                      avg_impl: str = "pallas",
+                      eval_fn: Optional[Callable] = None,
+                      eval_every: int = 0):
+    """R fused rounds of the PROPOSED protocol on the mesh layout
+    (see `_mesh_rounds_scan`), keyed bitwise-identically to
+    `protocol.gan_rounds_scan`."""
+    return _mesh_rounds_scan(
+        partial(_proposed_slice_round, spec, pcfg, device_axes),
+        PROPOSED_STACKED_KEYS, PROPOSED_METRICS, pcfg, mesh, n_rounds,
+        channel=channel, scheduler=scheduler, device_axes=device_axes,
+        disc_step_flops=disc_step_flops, gen_step_flops=gen_step_flops,
+        uplink_bits=uplink_bits, avg_impl=avg_impl, fedgan=False,
+        eval_fn=eval_fn, eval_every=eval_every)
+
+
+def fedgan_shard_rounds_scan(spec: GanModelSpec, pcfg: ProtocolConfig, mesh,
+                             n_rounds: int, *, channel, scheduler,
+                             device_axes=("data",),
+                             disc_step_flops: float = 1e9,
+                             gen_step_flops: float = 1e9,
+                             uplink_bits: Optional[int] = None,
+                             avg_impl: str = "pallas",
+                             eval_fn: Optional[Callable] = None,
+                             eval_every: int = 0):
+    """R fused FEDGAN rounds on the mesh layout: per-device joint D+G
+    local iterations, the single two-net quantized uplink payload,
+    Algorithm-2-style averaging of BOTH networks, and the FedGAN
+    wall-clock composition — one donated shard_map `lax.scan` dispatch,
+    keyed bitwise-identically to `fedgan.fedgan_rounds_scan` so the
+    host oracle pins it."""
+    return _mesh_rounds_scan(
+        partial(_fedgan_slice_round, spec, pcfg, device_axes),
+        FEDGAN_STACKED_KEYS, FEDGAN_METRICS, pcfg, mesh, n_rounds,
+        channel=channel, scheduler=scheduler, device_axes=device_axes,
+        disc_step_flops=disc_step_flops, gen_step_flops=gen_step_flops,
+        uplink_bits=uplink_bits, avg_impl=avg_impl, fedgan=True,
+        eval_fn=eval_fn, eval_every=eval_every)

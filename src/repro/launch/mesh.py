@@ -39,6 +39,18 @@ def use_mesh(mesh):
     return mesh
 
 
+def devices_error(n: int, context: str = "--layout mesh"):
+    """The shared mesh-entry-point guard: the actionable message when
+    fewer than `n` devices are addressable, else None. Callers check
+    BEFORE any dataset/compile work so a missing XLA_FLAGS fails fast
+    with the fix, not deep in jax.make_mesh."""
+    have = len(jax.devices())
+    if have >= n:
+        return None
+    return (f"{context} needs >= {n} devices, have {have} (set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n})")
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)

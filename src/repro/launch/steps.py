@@ -75,7 +75,8 @@ def build_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
                      pcfg_overrides: Optional[dict] = None,
                      act_disc_spec: Optional[object] = "default",
                      fuse_rounds: int = 1,
-                     layout: str = "stacked"):
+                     layout: str = "stacked",
+                     algorithm: str = "proposed"):
     """The protocol round as the pod-scale train step, on either
     execution layout.
 
@@ -91,18 +92,24 @@ def build_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
         launch/train.py chains chunks without copies. Returns
         (step, (state, batch, weights, seed)) with step jitted;
         step(state, batch, weights, seed) -> (state, metrics).
+        Proposed protocol only (the FedGAN baseline runs stacked through
+        `core.engine.Trainer`, not the pod-scale step builder).
 
     layout="mesh" — the explicit-collective path: `fuse_rounds` complete
         rounds (Step 1 scheduling + channel timing + quantized uplink +
-        Pallas-wavg Algorithm 2 + wallclock) run INSIDE `jax.shard_map`
-        as one donated `lax.scan` dispatch via
-        `core.shard_round.shard_rounds_scan`. Tensor-parallel (model
-        axis) sharding within a slice is not applied on this layout yet
-        — params replicate over `model`; the stacked layout remains the
-        TP path. Returns (step, (state, sched_carry, tokens, key,
-        start_round)); step(...) -> (state, sched_carry, out) where out
-        stacks per-round metrics/wallclock_s/mask/weights. Encoder-fed
-        families (encdec/vlm) are not supported on this layout.
+        Pallas-wavg averaging + wallclock) run INSIDE `jax.shard_map` as
+        one donated `lax.scan` dispatch via
+        `core.shard_round.shard_rounds_scan` (algorithm="proposed") or
+        `core.shard_round.fedgan_shard_rounds_scan`
+        (algorithm="fedgan": per-device joint D+G local iterations, the
+        two-net uplink payload, both networks averaged). Tensor-parallel
+        (model axis) sharding within a slice is not applied on this
+        layout yet — params replicate over `model`; the stacked layout
+        remains the TP path. Returns (step, (state, sched_carry,
+        tokens, key, start_round)); step(...) -> (state, sched_carry,
+        out) where out stacks per-round metrics/wallclock_s/mask/
+        weights. Encoder-fed families (encdec/vlm) are not supported on
+        this layout.
 
     The round applies the paper's quantized uplink per device
     (pcfg.quantize_bits, default 16) inside the round math; override
@@ -132,9 +139,15 @@ def build_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
     enc = needs_enc(cfg)
     if layout == "mesh":
         return _build_mesh_train_step(cfg, shape, mesh, plan, pcfg,
-                                      fuse_rounds)
+                                      fuse_rounds, algorithm)
     if layout != "stacked":
         raise ValueError(f"unknown layout {layout!r}")
+    if algorithm != "proposed":
+        raise ValueError(
+            f"build_train_step(layout='stacked') runs the proposed "
+            f"protocol only (got algorithm {algorithm!r}); FedGAN runs "
+            f"stacked through core.engine.Trainer, or on this builder "
+            f"with layout='mesh'")
 
     stacked_disc_specs = None  # filled after abstract init
 
@@ -208,18 +221,22 @@ def build_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
 
 
 def _build_mesh_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh, plan,
-                           pcfg: ProtocolConfig, fuse_rounds: int):
+                           pcfg: ProtocolConfig, fuse_rounds: int,
+                           algorithm: str = "proposed"):
     """layout="mesh" of `build_train_step`: `fuse_rounds` complete rounds
-    per dispatch inside shard_map, state + scheduler carry donated."""
+    per dispatch inside shard_map, state + scheduler carry donated.
+    algorithm selects the per-slice round body (proposed | fedgan)."""
     from repro.core.channel import ChannelConfig
+    from repro.core.engine import mesh_algorithm
     from repro.core.jax_channel import JaxChannel
     from repro.core.jax_scheduling import JaxScheduler
-    from repro.core.shard_round import shard_rounds_scan
 
     if needs_enc(cfg):
         raise NotImplementedError(
             "layout='mesh' does not support encoder-fed architectures "
             "(encdec/vlm) yet; use layout='stacked'")
+    algo = mesh_algorithm(algorithm)
+    rounds_scan, make_state = algo.mesh_rounds_scan, algo.make_state
     k_dev = math.prod(mesh.shape[a] for a in plan.dev_axes)
     assert shape.global_batch % k_dev == 0
     n_k = shape.global_batch // k_dev
@@ -231,16 +248,15 @@ def _build_mesh_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh, plan,
     channel = JaxChannel(ChannelConfig(n_devices=k_dev))
     scheduler = JaxScheduler(policy=pcfg.scheduler, n_devices=k_dev,
                              ratio=pcfg.scheduling_ratio)
-    step = shard_rounds_scan(spec, pcfg, mesh, max(1, fuse_rounds),
-                             channel=channel, scheduler=scheduler,
-                             device_axes=plan.dev_axes)
+    step = rounds_scan(spec, pcfg, mesh, max(1, fuse_rounds),
+                       channel=channel, scheduler=scheduler,
+                       device_axes=plan.dev_axes)
 
     def init_fn(key):
         return gan_model.gan_init(key, cfg)
 
     state_abs = _bf16_floats(jax.eval_shape(
-        lambda: protocol.make_train_state(jax.random.PRNGKey(0), init_fn,
-                                          pcfg, k_dev)))
+        lambda: make_state(jax.random.PRNGKey(0), init_fn, pcfg, k_dev)))
     carry_abs = jax.eval_shape(scheduler.init_carry)
     tokens_abs = jax.ShapeDtypeStruct((k_dev, n_k, seq), jnp.int32)
     key_abs = jax.eval_shape(lambda: jax.random.PRNGKey(0))

@@ -22,6 +22,12 @@ runs as a shorter final chunk through a per-length compile cache (the
 `engine.Trainer._chunk_fn` pattern). Checkpoint writes overlap the next
 dispatch: the state is device-copied, the next chunk is dispatched, and
 a background thread serializes the copy while the devices compute.
+
+The mesh layout runs EITHER fused algorithm (--algorithm proposed |
+fedgan — the latter is the two-net FedGAN baseline inside the same
+shard_map scan). Checkpoints serialize the scheduler carry, the
+absolute round index, and the simulated wallclock alongside the model
+state, so `--resume` continues masks AND the wallclock curve exactly.
 """
 from __future__ import annotations
 
@@ -59,7 +65,12 @@ class AsyncCheckpointer:
     def submit(self, step_index: int, state, metadata=None):
         from repro.checkpoint import save_checkpoint
         self.finish()
-        snapshot = jax.tree.map(jnp.copy, state)
+        # device arrays get a device-side copy (donation safety); host
+        # scalars (round index, f64 sim wallclock) keep their numpy
+        # dtype — jnp.copy would silently downcast f64 with x64 off
+        snapshot = jax.tree.map(
+            lambda x: jnp.copy(x) if isinstance(x, jax.Array)
+            else np.copy(x), state)
 
         def _write():
             try:
@@ -106,6 +117,11 @@ def main():
                     default="stacked",
                     help="stacked = GSPMD/pjit rounds; mesh = shard_map "
                          "rounds with the fused in-scan engine")
+    ap.add_argument("--algorithm", choices=["proposed", "fedgan"],
+                    default="proposed",
+                    help="proposed = the paper's protocol; fedgan = the "
+                         "two-net FedGAN baseline (layout mesh only on "
+                         "this builder)")
     ap.add_argument("--fuse-rounds", type=int, default=1,
                     help="rounds fused per XLA dispatch (lax.scan); any "
                          "--rounds works — the remainder runs as a "
@@ -117,10 +133,19 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=0,
                     help="checkpoint every N rounds (0 = final only); "
                          "writes overlap the next dispatch")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the latest checkpoint in --ckpt-dir "
+                         "(state + scheduler carry + round index + sim "
+                         "wallclock) and continue to --rounds")
     ap.add_argument("--distributed", action="store_true",
                     help="multi-host TPU: call jax.distributed.initialize")
     args = ap.parse_args()
     fuse = max(1, args.fuse_rounds)
+    if args.algorithm != "proposed" and args.layout != "mesh":
+        ap.error("--algorithm fedgan requires --layout mesh on this "
+                 "builder (stacked FedGAN runs through core.engine.Trainer)")
+    if args.resume and not args.ckpt_dir:
+        ap.error("--resume requires --ckpt-dir")
 
     if args.distributed:
         jax.distributed.initialize()
@@ -141,6 +166,7 @@ def main():
             step_cache[length] = steps_mod.build_train_step(
                 cfg, shape, mesh, mesh_cfg, schedule=args.schedule,
                 fuse_rounds=length, layout=args.layout,
+                algorithm=args.algorithm,
                 pcfg_overrides={"quantize_bits": args.quantize_bits})
         return step_cache[length]
 
@@ -157,17 +183,11 @@ def main():
         ef = abstract_args[1]["enc_feats"]
         batch["enc_feats"] = jnp.zeros(ef.shape, ef.dtype)
 
-    # real init (the dry-run uses ShapeDtypeStructs; here we train)
-    from repro.core import protocol
+    from repro.core.engine import mesh_algorithm
     from repro.core.jax_scheduling import JaxScheduler
     from repro.models import gan as gan_model
     pcfg = ProtocolConfig(n_devices=k_dev, n_d=2, n_g=2, sample_size=n_k,
                           server_sample_size=k_dev, schedule=args.schedule)
-    state = protocol.make_train_state(
-        jax.random.PRNGKey(0), lambda k: gan_model.gan_init(k, cfg), pcfg,
-        k_dev)
-    state = jax.tree.map(
-        lambda x, a: jnp.asarray(x, a.dtype), state, state_abs)
     weights = jnp.full((k_dev,), float(n_k))
     key = jax.random.PRNGKey(0)
     sched_carry = JaxScheduler(policy="all", n_devices=k_dev).init_carry()
@@ -175,10 +195,66 @@ def main():
     ckpt = AsyncCheckpointer(args.ckpt_dir) if args.ckpt_dir else None
     since_ckpt = 0
     wall_total = 0.0
+    start_round = 0
+    if args.resume:
+        from repro.checkpoint import load_checkpoint
+        tree, step_idx, meta = load_checkpoint(args.ckpt_dir)
+        for field, want in (("algorithm", args.algorithm),
+                            ("layout", args.layout)):
+            got = meta.get(field)
+            if got is not None and got != want:
+                raise SystemExit(
+                    f"checkpoint {args.ckpt_dir} was saved with "
+                    f"{field}={got}; refusing to resume with "
+                    f"--{field.replace('_', '-')} {want}")
+        if not (isinstance(tree, dict) and "state" in tree
+                and "trainer" in tree):
+            raise SystemExit(
+                f"checkpoint {args.ckpt_dir} predates --resume support "
+                f"(raw state, no trainer record); it cannot restore the "
+                f"round index/scheduler carry — restart without --resume")
+        # the checkpoint replaces the init entirely — cast against the
+        # abstract template instead of materializing a random state
+        # only to throw it away
+        state = jax.tree.map(lambda a, x: jnp.asarray(x, a.dtype),
+                             state_abs, tree["state"])
+        extra = tree["trainer"]
+        start_round = int(extra["round_index"])
+        wall_total = float(extra["sim_wall"])
+        sched_carry = jax.tree.map(
+            lambda a, x: jnp.asarray(x, a.dtype), sched_carry,
+            extra["sched_carry"])
+        print(f"resumed {args.ckpt_dir} at round {start_round} "
+              f"(sim_wall={wall_total:.1f}s)")
+        if start_round >= args.rounds:
+            # negative remainders in chunk_lengths would otherwise train
+            # a spurious chunk past the requested round count
+            print(f"checkpoint already at round {start_round} >= "
+                  f"--rounds {args.rounds}; nothing to do")
+            return
+    else:
+        # real init (the dry-run uses ShapeDtypeStructs; here we train)
+        # — per-algorithm state init comes from the ONE strategy
+        # registry (both CLI algorithms are mesh-capable, so the
+        # accessor covers the stacked layout's proposed-only case too)
+        make_state = mesh_algorithm(args.algorithm).make_state
+        state = make_state(
+            jax.random.PRNGKey(0), lambda k: gan_model.gan_init(k, cfg),
+            pcfg, k_dev)
+        state = jax.tree.map(
+            lambda x, a: jnp.asarray(x, a.dtype), state, state_abs)
+
+    def ckpt_tree(state):
+        # scheduler carry + round index + sim wallclock ride along, so a
+        # resumed run continues masks and the wallclock curve exactly
+        return {"state": state,
+                "trainer": {"round_index": np.int64(r),
+                            "sim_wall": np.float64(wall_total),
+                            "sched_carry": sched_carry}}
 
     with use_mesh(mesh):
-        r = 0
-        for chunk in chunk_lengths(args.rounds, fuse):
+        r = start_round
+        for chunk in chunk_lengths(args.rounds - start_round, fuse):
             t0 = time.time()
             step, _ = get_step(chunk)
             if args.layout == "mesh":
@@ -191,13 +267,16 @@ def main():
                 state, metrics = step(state, batch, weights, jnp.int32(r))
                 jax.block_until_ready(metrics)
             dt = time.time() - t0
-            d = np.atleast_1d(np.asarray(metrics["disc_objective"]))
-            g = np.atleast_1d(np.asarray(metrics["gen_objective"]))
+            # metric keys are per-algorithm (FedGAN's server only
+            # averages, so it reports participation, not objectives)
+            stats = " ".join(
+                f"{k}={np.atleast_1d(np.asarray(v))[-1]:+.4f}"
+                for k, v in sorted(metrics.items()))
             label = (f"round {r}" if chunk == 1 else
                      f"rounds {r}..{r + chunk - 1}")
             extra = (f" sim_wall={wall_total:.1f}s"
                      if args.layout == "mesh" else "")
-            print(f"{label}: disc_obj={d[-1]:+.4f} gen_obj={g[-1]:+.4f} "
+            print(f"{label}: {stats} "
                   f"({dt:.2f}s, {chunk / dt:.1f} rounds/s){extra}")
             r += chunk
             since_ckpt += chunk
@@ -205,12 +284,16 @@ def main():
                     and r < args.rounds:
                 # device-copy now, write in the background while the
                 # next chunk runs on the donated live buffers
-                ckpt.submit(r, state, metadata={"layout": args.layout})
+                ckpt.submit(r, ckpt_tree(state),
+                            metadata={"layout": args.layout,
+                                      "algorithm": args.algorithm})
                 since_ckpt = 0
 
     if ckpt:
         ckpt.finish()
-        ckpt.submit(args.rounds, state, metadata={"layout": args.layout})
+        ckpt.submit(args.rounds, ckpt_tree(state),
+                    metadata={"layout": args.layout,
+                              "algorithm": args.algorithm})
         ckpt.finish()
         print(f"saved {args.ckpt_dir}")
 

@@ -203,16 +203,20 @@ def tree_specs(tree, spec_leaf: P):
                         is_leaf=lambda x: x is None)
 
 
-def shard_round_state_specs(state, device_axes) -> dict:
-    """shard_map in/out specs for the protocol TrainState under the mesh
-    layout: gen/disc/gen_opt are replicated (the server is shared-seed
-    replicated computation), disc_opt is stacked over the device axes
-    (each slice IS one of the paper's K devices)."""
+def shard_round_state_specs(state, device_axes,
+                            stacked_keys=("disc_opt",)) -> dict:
+    """shard_map in/out specs for a TrainState under the mesh layout.
+
+    Entries in `stacked_keys` carry a leading K axis stacked over the
+    device axes (each slice IS one of the paper's K devices); the rest
+    replicate (the server is shared-seed replicated computation).
+    Proposed protocol: only `disc_opt` is per-device. FedGAN: both
+    optimizer states are per-device (`gen_opt` AND `disc_opt`), since
+    every device trains a local generator too.
+    """
     stacked, rep = P(device_axes), P()
-    return {"gen": tree_specs(state["gen"], rep),
-            "disc": tree_specs(state["disc"], rep),
-            "gen_opt": tree_specs(state["gen_opt"], rep),
-            "disc_opt": tree_specs(state["disc_opt"], stacked)}
+    return {k: tree_specs(v, stacked if k in stacked_keys else rep)
+            for k, v in state.items()}
 
 
 # ---------------------------------------------------------------------------

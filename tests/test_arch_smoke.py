@@ -1,4 +1,8 @@
-"""Per-architecture smoke tests (assignment requirement f).
+"""Per-architecture smoke tests (assignment requirement f), plus
+end-to-end smoke runs of the FedGAN-comparison entry points
+(examples/fedgan_compare.py, benchmarks/fig5_fedgan.py) on BOTH
+execution layouts — pinning their `--layout` plumbing so neither script
+silently assumes stacked again.
 
 Each assigned architecture instantiates its REDUCED variant (<=2 layers
 of its group pattern, d_model<=256, <=4 experts) and runs ONE forward
@@ -6,6 +10,9 @@ and ONE protocol train round on CPU, asserting output shapes and no
 NaNs. The FULL configs are exercised only by the dry-run.
 """
 import dataclasses
+import os
+import subprocess
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -19,6 +26,7 @@ from repro.models.specs import make_backbone_spec, make_stub_enc_feats
 
 KEY = jax.random.PRNGKey(0)
 SEQ = 16
+ROOT = os.path.join(os.path.dirname(__file__), "..")
 
 
 def _spec_and_params(name):
@@ -65,3 +73,56 @@ def test_one_train_round(name):
     d0 = jax.tree_util.tree_leaves(state["disc"])
     d1 = jax.tree_util.tree_leaves(new_state["disc"])
     assert any(float(jnp.abs(a - b).max()) > 0 for a, b in zip(d0, d1))
+
+
+# ---------------------------------------------------------------------------
+# FedGAN-comparison entry points: --layout smoke (satellite of the
+# layout x algorithm matrix; slow-marked, run in the CI mesh lane)
+# ---------------------------------------------------------------------------
+
+def _run_script(argv, *, n_devices=0, env_extra=None, timeout=540):
+    """Run a repo script in a subprocess (optionally with a forced
+    multi-device host platform — the main pytest process must keep the
+    single-device view, see tests/conftest.py)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    if n_devices:
+        env["XLA_FLAGS"] = \
+            f"--xla_force_host_platform_device_count={n_devices}"
+    env.update(env_extra or {})
+    out = subprocess.run([sys.executable] + argv, capture_output=True,
+                         text=True, env=env, cwd=ROOT, timeout=timeout)
+    assert out.returncode == 0, \
+        f"{argv} failed:\n{out.stdout[-2000:]}\n{out.stderr[-4000:]}"
+    return out.stdout
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("layout", ["stacked", "mesh"])
+def test_fedgan_compare_example_runs_on_layout(layout):
+    """examples/fedgan_compare.py --layout {stacked,mesh}: both
+    algorithms complete a round and report FID/wallclock/uplink on the
+    requested layout (mesh on a forced 4-device host)."""
+    out = _run_script(
+        ["examples/fedgan_compare.py", "--rounds", "1", "--layout",
+         layout, "--devices", "4", "--data", "64"],
+        n_devices=4 if layout == "mesh" else 0)
+    assert "proposed-serial" in out and "fedgan" in out
+    assert "FID=" in out and "[fused]" in out
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("layout", ["stacked", "mesh"])
+def test_fig5_bench_runs_on_layout(tmp_path, layout):
+    """benchmarks/fig5_fedgan.py --smoke --layout {stacked,mesh}: the
+    Fig. 5 sweep writes a per-layout curves JSON with both algorithms'
+    rows."""
+    out = _run_script(
+        ["benchmarks/fig5_fedgan.py", "--smoke", "--layout", layout,
+         "--devices", "4", "--out-dir", str(tmp_path)],
+        n_devices=4 if layout == "mesh" else 0,
+        env_extra={"REPRO_BENCH_ROUNDS": "2",
+                   "REPRO_BENCH_EVAL_EVERY": "2"})
+    assert f"fig5_proposed-serial_{layout}" in out
+    assert f"fig5_fedgan_{layout}" in out
+    assert (tmp_path / f"fig5_fedgan_{layout}.json").exists()

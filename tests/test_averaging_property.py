@@ -1,0 +1,206 @@
+"""Property tests: `averaging.weighted_average_psum(impl="pallas")` —
+the mesh layout's Algorithm-2 hot path (flatten → one all-gather → the
+Pallas `wavg` kernel) — against the pure per-leaf-psum reference
+(impl="jnp") that the stacked layout's semantics define.
+
+The collectives run under `jax.vmap(..., axis_name=...)`, which gives
+`lax.psum`/`lax.all_gather` a real named axis of size K on a single
+CPU device — so the whole property sweep runs in-process, no forced
+multi-device subprocess needed (the real shard_map execution is pinned
+by tests/test_multidevice.py and the mesh equivalence matrix).
+
+Hypothesis runs when importable (requirements-dev.txt, guarded like
+tests/test_quantize.py); every generated case is derived from a drawn
+SEED, so a shrunk failure reproduces from the seed alone. The same
+check functions run unconditionally on seeded twins, so the invariants
+are pinned in every environment. Leaf-size strategies deliberately land
+the flattened payload on BLOCK_N edges (BLOCK_N - 1, BLOCK_N,
+BLOCK_N + 1, and the 2-block edges), forcing the kernel wrapper's
+padded tail slices.
+"""
+import pytest
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.averaging import weighted_average_psum
+from repro.kernels.wavg.kernel import BLOCK_N
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+AXIS = "k"
+
+
+def run_impl(tree_stacked, weights, impl):
+    """weighted_average_psum over a vmap-named device axis; the result
+    is replicated, so slice 0 is THE average."""
+    out = jax.vmap(
+        lambda t, w: weighted_average_psum(t, w, axis_names=AXIS,
+                                           impl=impl),
+        axis_name=AXIS)(tree_stacked, weights)
+    return out, jax.tree.map(lambda x: x[0], out)
+
+
+def make_case(seed: int, *, k=None, sizes=None, dtypes=None,
+              zero_weights=False):
+    """Random stacked pytree + weights, fully determined by `seed`."""
+    rng = np.random.default_rng(seed)
+    k = k or int(rng.integers(1, 9))
+    if sizes is None:
+        sizes = [int(rng.integers(1, 300))
+                 for _ in range(int(rng.integers(1, 4)))]
+    if dtypes is None:
+        dtypes = [jnp.float32 if rng.integers(2) else jnp.bfloat16
+                  for _ in sizes]
+    tree = {
+        f"leaf{i}": jnp.asarray(
+            rng.standard_normal((k, n)) * rng.uniform(0.1, 10.0),
+            dt)
+        for i, (n, dt) in enumerate(zip(sizes, dtypes))
+    }
+    if zero_weights:
+        w = jnp.zeros(k, jnp.float32)
+    else:
+        w = jnp.asarray(rng.uniform(0.0, 5.0, k), jnp.float32)
+        # some devices unscheduled (weight exactly 0), like Step 1 output
+        w = jnp.where(jnp.asarray(rng.uniform(size=k) < 0.3), 0.0, w)
+    return tree, w
+
+
+def block_edge_sizes(rng, blocks: int):
+    """Leaf sizes whose payload total lands next to a BLOCK_N edge,
+    forcing the kernel wrapper's padded tail slice."""
+    total = blocks * BLOCK_N + int(rng.integers(-2, 3))
+    head = int(rng.integers(1, 64))
+    return [head, max(1, total - head)]
+
+
+# ---------------------------------------------------------------------------
+# Shared checks (called by both the hypothesis and the seeded tests)
+# ---------------------------------------------------------------------------
+
+def check_pallas_matches_psum_reference(tree, w):
+    """The Pallas hot path must agree with the per-leaf psum reference
+    leaf-for-leaf, preserving structure, shape, and dtype."""
+    _, pal = run_impl(tree, w, "pallas")
+    _, ref = run_impl(tree, w, "jnp")
+    assert (jax.tree_util.tree_structure(pal)
+            == jax.tree_util.tree_structure(ref))
+    for a, b in zip(jax.tree_util.tree_leaves(pal),
+                    jax.tree_util.tree_leaves(ref)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        atol = 1e-5 if a.dtype == jnp.float32 else 0.02
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=atol)
+
+
+def check_result_replicated_across_devices(tree, w):
+    """Every slice must hold the SAME average (the broadcast invariant
+    Step 5 relies on)."""
+    stacked, _ = run_impl(tree, w, "pallas")
+    for leaf in jax.tree_util.tree_leaves(stacked):
+        first = np.asarray(leaf[0:1], np.float32)
+        np.testing.assert_array_equal(
+            np.broadcast_to(first, leaf.shape),
+            np.asarray(leaf, np.float32))
+
+
+def check_weight_scale_invariance(tree, w, scale: float):
+    """Weights are normalized, so w and scale*w give the same average
+    (Algorithm 2 depends on the m_k ratios only)."""
+    _, a = run_impl(tree, w, "pallas")
+    _, b = run_impl(tree, w * scale, "pallas")
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        atol = 1e-5 if x.dtype == jnp.float32 else 0.02
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32), atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis property tests (CI / dev environments)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    SETTINGS = dict(max_examples=20, deadline=None)
+
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 2 ** 16))
+    def test_prop_pallas_matches_psum_random_trees(seed):
+        tree, w = make_case(seed)
+        check_pallas_matches_psum_reference(tree, w)
+
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 2 ** 16), blocks=st.integers(1, 2))
+    def test_prop_pallas_matches_psum_at_block_edges(seed, blocks):
+        rng = np.random.default_rng(seed)
+        tree, w = make_case(seed, sizes=block_edge_sizes(rng, blocks))
+        check_pallas_matches_psum_reference(tree, w)
+
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 2 ** 16))
+    def test_prop_result_replicated(seed):
+        tree, w = make_case(seed)
+        check_result_replicated_across_devices(tree, w)
+
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 2 ** 16),
+           scale=st.floats(0.25, 64.0))
+    def test_prop_weight_scale_invariance(seed, scale):
+        tree, w = make_case(seed)
+        check_weight_scale_invariance(tree, w, scale)
+
+
+# ---------------------------------------------------------------------------
+# Seeded twins (always run)
+# ---------------------------------------------------------------------------
+
+class TestPallasAveragingSeeded:
+    @pytest.mark.parametrize("seed", range(5))
+    def test_matches_psum_random_trees(self, seed):
+        tree, w = make_case(seed)
+        check_pallas_matches_psum_reference(tree, w)
+
+    @pytest.mark.parametrize("blocks", [1, 2])
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_matches_psum_at_block_edges(self, seed, blocks):
+        rng = np.random.default_rng(seed)
+        tree, w = make_case(seed, sizes=block_edge_sizes(rng, blocks))
+        check_pallas_matches_psum_reference(tree, w)
+
+    def test_single_device_axis(self):
+        tree, w = make_case(3, k=1, zero_weights=False)
+        check_pallas_matches_psum_reference(tree, jnp.ones(1))
+
+    def test_all_zero_weights_agree(self):
+        """Nobody scheduled: both impls guard the normalizer the same
+        way, so they must still agree (the engine's straggler-only
+        rounds hit this)."""
+        tree, w = make_case(4, k=4, zero_weights=True)
+        check_pallas_matches_psum_reference(tree, w)
+
+    def test_replicated_and_scale_invariant(self):
+        tree, w = make_case(5)
+        check_result_replicated_across_devices(tree, w)
+        check_weight_scale_invariance(tree, w, 8.0)
+
+    def test_bf16_leaves_roundtrip_dtype(self):
+        tree, w = make_case(6, sizes=[33, 2048],
+                            dtypes=[jnp.bfloat16, jnp.bfloat16])
+        _, pal = run_impl(tree, w, "pallas")
+        for leaf in jax.tree_util.tree_leaves(pal):
+            assert leaf.dtype == jnp.bfloat16
+
+    def test_empty_tree_short_circuits(self):
+        out = weighted_average_psum({}, jnp.ones(()), axis_names=AXIS,
+                                    impl="pallas")
+        assert out == {}
+
+    def test_unknown_impl_raises(self):
+        with pytest.raises(ValueError, match="impl"):
+            run_impl(*make_case(7), "warp")

@@ -180,8 +180,14 @@ class TestTrainerCheckpointResume:
     so a resumed fused run continues masks, params, AND the wallclock
     curve exactly."""
 
-    def test_fused_save_restore_continues_exactly(self, tmp_path):
-        kw = dict(scheduler="round_robin", ratio=0.5)
+    @pytest.mark.parametrize("algorithm", ["proposed", "fedgan"])
+    def test_fused_save_restore_continues_exactly(self, tmp_path,
+                                                  algorithm):
+        """Kill mid-run, restore, and the wallclock curve and mask
+        sequence continue exactly — for BOTH fused algorithms (the
+        FedGAN case additionally round-trips the per-device gen_opt
+        stack its state carries)."""
+        kw = dict(scheduler="round_robin", ratio=0.5, algorithm=algorithm)
         ta = make_trainer("fused", **kw)
         ta.run(3)
         ta.save_checkpoint(str(tmp_path))
@@ -222,20 +228,33 @@ class TestMeshLayoutSelection:
                     lambda k: dcgan.gan_init(k, CFG), DATA, KEY,
                     layout="warp")
 
-    def test_mesh_layout_rejects_non_proposed(self):
-        for algorithm in ("fedgan", "centralized"):
-            with pytest.raises(ValueError, match="mesh"):
-                Trainer(SPEC, ProtocolConfig(n_devices=K),
-                        lambda k: dcgan.gan_init(k, CFG), DATA, KEY,
-                        algorithm=algorithm, layout="mesh")
+    def test_mesh_layout_rejects_centralized(self):
+        """centralized has no device structure, so mesh raises — but
+        BOTH protocol algorithms are mesh-capable now (the layout x
+        algorithm matrix is complete)."""
+        from repro.core.engine import MESH_ALGORITHMS
+        assert set(MESH_ALGORITHMS) == {"proposed", "fedgan"}
+        with pytest.raises(ValueError, match="mesh"):
+            Trainer(SPEC, ProtocolConfig(n_devices=K),
+                    lambda k: dcgan.gan_init(k, CFG), DATA, KEY,
+                    algorithm="centralized", layout="mesh")
+
+    def test_mesh_algorithms_have_fused_entries(self):
+        from repro.core.engine import _ALGORITHMS
+        for name in ("proposed", "fedgan"):
+            algo = _ALGORITHMS[name]
+            assert algo.mesh_round is not None
+            assert algo.mesh_rounds_scan is not None
 
 
 class TestMeshFusedEquivalence:
-    """Satellite: mesh-fused vs stacked-fused vs host equivalence matrix
-    (schedules x quantize_bits) on a forced 8-device host mesh. The
-    whole matrix runs in ONE subprocess (the jax startup dominates);
-    masks must agree BITWISE across all three drivers and params to
-    float32 tolerance. Runs in CI's mesh lane."""
+    """Satellite: the FULL layout x algorithm matrix — mesh-fused vs
+    stacked-fused vs host oracle, for BOTH the proposed protocol and
+    FedGAN, over schedules x quantize_bits, on a forced 8-device host
+    mesh. The whole matrix runs in ONE subprocess (the jax startup
+    dominates); masks must agree BITWISE across all three drivers and
+    params to float32 tolerance. Resume is checked for both algorithms
+    on the mesh layout. Runs in CI's mesh lane."""
 
     @pytest.mark.slow
     def test_mesh_matrix_and_resume_on_8_device_mesh(self):
@@ -257,7 +276,7 @@ class TestMeshFusedEquivalence:
             DATA = jax.random.normal(jax.random.PRNGKey(9),
                                      (K, 8, 8, 8, 1))
 
-            def make(driver, layout, schedule, bits):
+            def make(driver, layout, schedule, bits, algorithm):
                 pcfg = ProtocolConfig(
                     n_devices=K, n_d=1, n_g=1, sample_size=4,
                     server_sample_size=4, lr_d=1e-3, lr_g=1e-3,
@@ -267,16 +286,17 @@ class TestMeshFusedEquivalence:
                 return Trainer(SPEC, pcfg,
                                lambda k: dcgan.gan_init(k, CFG), DATA,
                                KEY, channel_cfg=chan, driver=driver,
-                               layout=layout)
+                               layout=layout, algorithm=algorithm)
 
             def leaves(t):
                 return jax.tree_util.tree_leaves(t.state)
 
-            for schedule, bits in itertools.product(
-                    ("serial", "parallel"), (16, 32)):
-                th = make("host", "stacked", schedule, bits)
-                ts = make("fused", "stacked", schedule, bits)
-                tm = make("fused", "mesh", schedule, bits)
+            for algorithm, schedule, bits in itertools.product(
+                    ("proposed", "fedgan"), ("serial", "parallel"),
+                    (16, 32)):
+                th = make("host", "stacked", schedule, bits, algorithm)
+                ts = make("fused", "stacked", schedule, bits, algorithm)
+                tm = make("fused", "mesh", schedule, bits, algorithm)
                 h, s, m = th.run(4), ts.run(4), tm.run(4)
                 for rh, rs, rm in zip(h, s, m):
                     np.testing.assert_array_equal(rh.mask, rs.mask)
@@ -293,26 +313,43 @@ class TestMeshFusedEquivalence:
                     np.testing.assert_allclose(
                         np.asarray(a, np.float32),
                         np.asarray(b, np.float32), atol=2e-5)
-                print(f"matrix OK schedule={schedule} bits={bits}")
+                print(f"matrix OK algorithm={algorithm} "
+                      f"schedule={schedule} bits={bits}")
 
-            # resumed mesh run continues the wallclock curve exactly
-            d = tempfile.mkdtemp()
-            ta = make("fused", "mesh", "serial", 16)
-            ta.run(2)
-            ta.save_checkpoint(d)
-            tb = make("fused", "mesh", "serial", 16)
-            tb.restore(d)
-            tb.run(2)
-            tc = make("fused", "mesh", "serial", 16)
-            tc.run(4)
-            for a, b in zip(leaves(tb), leaves(tc)):
-                np.testing.assert_array_equal(np.asarray(a),
-                                              np.asarray(b))
-            assert tb._clock == tc._clock
-            for rb, rc in zip(tb.history, tc.history[2:]):
-                assert rb.cumulative_s == rc.cumulative_s
-                np.testing.assert_array_equal(rb.mask, rc.mask)
-            print("mesh resume OK")
+            # mesh+host (per-round shard_map dispatch) agrees too —
+            # one representative per algorithm
+            for algorithm in ("proposed", "fedgan"):
+                th = make("host", "stacked", "serial", 16, algorithm)
+                tm = make("host", "mesh", "serial", 16, algorithm)
+                h, m = th.run(3), tm.run(3)
+                for rh, rm in zip(h, m):
+                    np.testing.assert_array_equal(rh.mask, rm.mask)
+                for a, b in zip(leaves(th), leaves(tm)):
+                    np.testing.assert_allclose(
+                        np.asarray(a, np.float32),
+                        np.asarray(b, np.float32), atol=2e-5)
+                print(f"mesh host driver OK algorithm={algorithm}")
+
+            # resumed mesh runs continue the wallclock curve and mask
+            # sequence exactly — both algorithms
+            for algorithm in ("proposed", "fedgan"):
+                d = tempfile.mkdtemp()
+                ta = make("fused", "mesh", "serial", 16, algorithm)
+                ta.run(2)
+                ta.save_checkpoint(d)
+                tb = make("fused", "mesh", "serial", 16, algorithm)
+                tb.restore(d)
+                tb.run(2)
+                tc = make("fused", "mesh", "serial", 16, algorithm)
+                tc.run(4)
+                for a, b in zip(leaves(tb), leaves(tc)):
+                    np.testing.assert_array_equal(np.asarray(a),
+                                                  np.asarray(b))
+                assert tb._clock == tc._clock
+                for rb, rc in zip(tb.history, tc.history[2:]):
+                    assert rb.cumulative_s == rc.cumulative_s
+                    np.testing.assert_array_equal(rb.mask, rc.mask)
+                print(f"mesh resume OK algorithm={algorithm}")
         """)
 
 

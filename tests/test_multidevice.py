@@ -94,14 +94,18 @@ def test_mini_dryrun_train_and_decode_lower_on_mesh():
 @pytest.mark.slow
 def test_mesh_layout_train_step_executes():
     """launch/steps.build_train_step(layout='mesh'): the fused shard_map
-    rounds-scan executes on a real 8-device mesh, including a shorter
-    remainder chunk through a second compile (any round count works)."""
-    run_sub("""
+    rounds-scan executes on a real 8-device mesh for BOTH mesh
+    algorithms, including a shorter remainder chunk through a second
+    compile (any round count works). Three backbone-scale shard_map
+    compiles in one subprocess — give it headroom over the default
+    timeout."""
+    run_sub(timeout=1100, code="""
         import dataclasses
         import jax, jax.numpy as jnp, numpy as np
         from repro.configs import get_arch_config
         from repro.configs.base import MeshConfig, ShapeConfig
         from repro.core import protocol
+        from repro.core.fedgan import make_fedgan_state
         from repro.launch import steps as steps_mod
         from repro.launch.mesh import make_mesh, use_mesh
         from repro.models import gan as gan_model
@@ -141,6 +145,42 @@ def test_mesh_layout_train_step_executes():
         for leaf in jax.tree_util.tree_leaves(state):
             assert bool(jnp.isfinite(leaf.astype(jnp.float32)).all())
         print('mesh layout train step OK')
+
+        # FedGAN through the SAME builder: two-net fused shard_map scan
+        fstep, fargs = steps_mod.build_train_step(
+            cfg, shape, mesh, MeshConfig(), fuse_rounds=2, layout='mesh',
+            algorithm='fedgan', pcfg_overrides=over)
+        fstate_abs = fargs[0]
+        fstate = make_fedgan_state(
+            jax.random.PRNGKey(0), lambda k: gan_model.gan_init(k, cfg),
+            pcfg, 8)
+        fstate = jax.tree.map(lambda x, a: jnp.asarray(x, a.dtype),
+                              fstate, fstate_abs)
+        # gen_opt is per-device on FedGAN (every device trains both nets)
+        gen_opt_leaves = jax.tree_util.tree_leaves(fstate['gen_opt'])
+        assert all(l.shape[0] == 8 for l in gen_opt_leaves)
+        carry = {'rr_cursor': jnp.int32(0),
+                 'ewma_rate': jnp.ones(8, jnp.float32)}
+        with use_mesh(mesh):
+            fstate, carry, fout = fstep(fstate, carry, tokens, key,
+                                        jnp.int32(0))
+        assert fout['wallclock_s'].shape == (2,)
+        assert set(fout['metrics']) == {'participation'}
+        for leaf in jax.tree_util.tree_leaves(fstate):
+            assert bool(jnp.isfinite(leaf.astype(jnp.float32)).all())
+        print('mesh layout fedgan train step OK')
+
+        # stacked builder stays proposed-only (FedGAN stacked runs via
+        # the Trainer, not the pod-scale builder)
+        try:
+            steps_mod.build_train_step(cfg, shape, mesh, MeshConfig(),
+                                       layout='stacked',
+                                       algorithm='fedgan')
+        except ValueError as e:
+            assert 'proposed' in str(e)
+        else:
+            raise AssertionError('stacked fedgan builder must raise')
+        print('stacked builder algorithm guard OK')
     """)
 
 

@@ -107,6 +107,23 @@ class TestCheckpoint:
         save_checkpoint(str(tmp_path), 5, {"x": jnp.ones(1)})
         assert latest_step(str(tmp_path)) == 5
 
+    def test_bfloat16_roundtrips_bitwise(self, tmp_path):
+        """bf16 leaves (the launch path's compute dtype) must come back
+        bit-exact — np.savez stores ml_dtypes arrays as raw void bytes,
+        so the checkpoint stores their uint16 view instead
+        (launch/train.py --resume of a bf16 state hits this)."""
+        x = (jnp.arange(7.0, dtype=jnp.float32) * 0.3).astype(jnp.bfloat16)
+        tree = {"p": {"w": x}, "f32": jnp.ones(2)}
+        save_checkpoint(str(tmp_path), 1, tree)
+        loaded, _, _ = load_checkpoint(str(tmp_path))
+        assert loaded["p"]["w"].dtype == np.asarray(x).dtype
+        np.testing.assert_array_equal(
+            np.asarray(loaded["p"]["w"]).view(np.uint16),
+            np.asarray(x).view(np.uint16))
+        back = jnp.asarray(loaded["p"]["w"], jnp.bfloat16)
+        np.testing.assert_array_equal(np.asarray(back, np.float32),
+                                      np.asarray(x, np.float32))
+
 
 class TestOptim:
     def test_sgd_descends_quadratic(self):
