@@ -1,6 +1,9 @@
 """Driver microbenchmark: rounds/sec of per-round dispatch vs the fused
 multi-round engine, on BOTH execution layouts, at K=8 devices and the
-paper-default 16-bit quantized uplink.
+paper-default 16-bit quantized uplink — plus the per-rank
+Algorithm-2 all-gather payload at each tensor-parallel width (the
+simulated CHANNEL uplink is tp-invariant by design; this column is
+the collective payload each TP rank actually gathers).
 
   --layout stacked (default): the per-round host loop vs the fused
       `protocol.rounds_scan`, for both fused algorithms (proposed +
@@ -12,6 +15,13 @@ paper-default 16-bit quantized uplink.
       FedGAN, so BENCH_driver.json records fused-vs-per-round speedup
       for both algorithms on both layouts. Requires >= K addressable
       devices, e.g. XLA_FLAGS=--xla_force_host_platform_device_count=8.
+  --tp N (mesh only): run every worker slice as an N-wide Megatron TP
+      group on the 2-D (data x model) mesh — the model is
+      `models.gan.mlp_gan_spec(tp_axis="model")`, the state enters
+      shard_map sharded over `model`, and the recorded
+      `allgather_bytes_per_rank` column shrinks by ~1/N (each TP rank
+      all-gathers only its parameter shard in Algorithm 2). Requires
+      K x N addressable devices (16 for the CI tp=2 smoke).
 
 The fused driver's win is everything per-round dispatch pays — dispatch
 latency, weight/metrics host sync, numpy scheduling — so the bench runs
@@ -25,13 +35,16 @@ rounds/sec over per-round dispatch for each measured pair.
     PYTHONPATH=src python benchmarks/driver_bench.py --smoke      # CI
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     PYTHONPATH=src python benchmarks/driver_bench.py --smoke --layout mesh
+    XLA_FLAGS=--xla_force_host_platform_device_count=16 \
+    PYTHONPATH=src python benchmarks/driver_bench.py --smoke --layout mesh --tp 2
 
-Every run merges its rounds/sec numbers into BENCH_driver.json (keyed
-per layout), so CI artifacts record both layouts side by side.
-`--smoke` shrinks the measurement and exits non-zero if a fused path
-regresses below per-round dispatch (threshold 1.2x, conservative
-against CI-runner noise), so fused-path slowdowns fail in CI instead of
-surfacing in benchmark reports.
+Every run merges its rounds/sec + all-gather-bytes numbers into
+BENCH_driver.json (keyed per layout, with tp widths > 1 keyed
+"mesh_tp<N>"), so CI artifacts record every layout x algorithm x tp
+side by side. `--smoke` shrinks the measurement and exits non-zero if a
+fused path regresses below per-round dispatch (threshold 1.2x,
+conservative against CI-runner noise), so fused-path slowdowns fail in
+CI instead of surfacing in benchmark reports.
 """
 from __future__ import annotations
 
@@ -44,58 +57,56 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ProtocolConfig
 from repro.core import Trainer
 from repro.core.channel import ChannelConfig
-from repro.core.protocol import GanModelSpec
+from repro.models.gan import mlp_gan_init, mlp_gan_spec
+from repro.sharding import rules
 
 K = int(os.environ.get("REPRO_DRIVER_BENCH_K", "8"))
 N_ROUNDS = int(os.environ.get("REPRO_DRIVER_BENCH_ROUNDS", "50"))
 
 # Tiny two-layer MLP-GAN over 64-dim "flattened images": a handful of
 # matmuls per round, so round time ~ driver overhead, not model FLOPs.
+# Lives in models/gan.py (mlp_gan_*) so the TP equivalence tests pin
+# the exact model this bench measures.
 NZ, HIDDEN, DIM = 8, 16, 64
 
 
 def _gan_init(key):
-    ks = jax.random.split(key, 4)
-    s = lambda k, sh: jax.random.normal(k, sh) * 0.1
-    return {"gen": {"w1": s(ks[0], (NZ, HIDDEN)),
-                    "w2": s(ks[1], (HIDDEN, DIM))},
-            "disc": {"w1": s(ks[2], (DIM, HIDDEN)),
-                     "w2": s(ks[3], (HIDDEN, 1))}}
+    return mlp_gan_init(key, d_z=NZ, d_hidden=HIDDEN, d_data=DIM)
 
 
-def _disc_logits(p, x):
-    return (jnp.tanh(x.reshape(x.shape[0], -1) @ p["w1"]) @ p["w2"])[:, 0]
-
-
-BENCH_SPEC = GanModelSpec(
-    sample_z=lambda k, n: jax.random.normal(k, (n, NZ)),
-    gen_apply=lambda p, z: jnp.tanh(jnp.tanh(z @ p["w1"]) @ p["w2"]),
-    disc_real=_disc_logits,
-    disc_fake=_disc_logits)
-
-
-def make_trainer(driver: str, algorithm: str,
-                 layout: str = "stacked") -> Trainer:
+def make_trainer(driver: str, algorithm: str, layout: str = "stacked",
+                 tp: int = 1) -> Trainer:
     pcfg = ProtocolConfig(n_devices=K, n_d=1, n_g=1, sample_size=4,
                           server_sample_size=4, lr_d=1e-3, lr_g=1e-3)
     data = jax.random.normal(jax.random.PRNGKey(9), (K, 8, DIM))
-    return Trainer(BENCH_SPEC, pcfg, _gan_init, data,
+    spec = mlp_gan_spec(d_z=NZ, tp_axis="model" if tp > 1 else None)
+    return Trainer(spec, pcfg, _gan_init, data,
                    jax.random.PRNGKey(0), algorithm=algorithm,
                    channel_cfg=ChannelConfig(n_devices=K), driver=driver,
-                   layout=layout)
+                   layout=layout, tp=tp)
+
+
+def allgather_bytes_per_rank(algorithm: str, tp: int) -> int:
+    """Per-TP-rank Algorithm-2 all-gather payload in bytes (f32): the
+    uploaded tree's local shard size — the column the tp sweep is
+    about (tp=2 must land at ~1/2 the tp=1 bytes)."""
+    state = _gan_init(jax.random.PRNGKey(0))
+    payload = (state["disc"] if algorithm == "proposed"
+               else {"gen": state["gen"], "disc": state["disc"]})
+    return 4 * rules.tp_local_size(payload, tp)
 
 
 def time_driver(driver: str, algorithm: str, n_rounds: int,
-                layout: str = "stacked", repeats: int = 3) -> float:
+                layout: str = "stacked", tp: int = 1,
+                repeats: int = 3) -> float:
     """rounds/sec: best of `repeats` timed runs of n_rounds after a
     warmup run, so the jitted round (host) / chunk (fused) is already
     compiled and scheduler noise on shared machines is suppressed."""
-    trainer = make_trainer(driver, algorithm, layout)
+    trainer = make_trainer(driver, algorithm, layout, tp)
     trainer.run(n_rounds)                       # warmup incl. compile
     jax.block_until_ready(trainer.state)
     best = 0.0
@@ -107,22 +118,30 @@ def time_driver(driver: str, algorithm: str, n_rounds: int,
     return best
 
 
-def bench_pair(algorithm: str, n_rounds: int, layout: str) -> dict:
-    """host (per-round dispatch) vs fused, on one layout."""
-    host_rps = time_driver("host", algorithm, n_rounds, layout)
-    fused_rps = time_driver("fused", algorithm, n_rounds, layout)
+def bench_pair(algorithm: str, n_rounds: int, layout: str,
+               tp: int = 1) -> dict:
+    """host (per-round dispatch) vs fused, on one layout x tp."""
+    host_rps = time_driver("host", algorithm, n_rounds, layout, tp)
+    fused_rps = time_driver("fused", algorithm, n_rounds, layout, tp)
     speedup = fused_rps / host_rps
-    tag = f"driver_bench_{layout}_{algorithm}"
+    up_bytes = allgather_bytes_per_rank(algorithm, tp)
+    tag = f"driver_bench_{layout_key(layout, tp)}_{algorithm}"
     print(f"{tag}_host,{1e6 / host_rps:.1f},rounds_per_s={host_rps:.1f}")
     print(f"{tag}_fused,{1e6 / fused_rps:.1f},"
-          f"rounds_per_s={fused_rps:.1f};speedup={speedup:.2f}x")
+          f"rounds_per_s={fused_rps:.1f};speedup={speedup:.2f}x;"
+          f"allgather_bytes_per_rank={up_bytes}")
     return {"per_round_rps": host_rps, "fused_rps": fused_rps,
-            "speedup": speedup}
+            "speedup": speedup, "allgather_bytes_per_rank": up_bytes}
 
 
-def write_json(path: str, layout: str, results: dict, n_rounds: int):
-    """Merge this layout's numbers into BENCH_driver.json, preserving
-    the other layout's entry (and its own measurement length)."""
+def layout_key(layout: str, tp: int) -> str:
+    return layout if tp <= 1 else f"{layout}_tp{tp}"
+
+
+def write_json(path: str, layout: str, tp: int, results: dict,
+               n_rounds: int):
+    """Merge this layout x tp's numbers into BENCH_driver.json,
+    preserving every other entry (and its own measurement length)."""
     payload = {}
     if os.path.exists(path):
         try:
@@ -130,8 +149,8 @@ def write_json(path: str, layout: str, results: dict, n_rounds: int):
                 payload = json.load(f)
         except (OSError, json.JSONDecodeError):
             payload = {}
-    payload.setdefault("layouts", {})[layout] = {
-        "k": K, "rounds": n_rounds, "algorithms": results}
+    payload.setdefault("layouts", {})[layout_key(layout, tp)] = {
+        "k": K, "tp": tp, "rounds": n_rounds, "algorithms": results}
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)
     print(f"wrote {path}")
@@ -145,32 +164,40 @@ def main(argv=None):
     ap.add_argument("--rounds", type=int, default=None)
     ap.add_argument("--layout", choices=["stacked", "mesh"],
                     default="stacked")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="mesh only: TP width per worker slice; needs "
+                         "K x tp addressable devices")
     ap.add_argument("--json", default="BENCH_driver.json",
-                    help="merge rounds/sec per layout into this file")
+                    help="merge rounds/sec per layout x tp into this "
+                         "file")
     args = ap.parse_args(argv)
     n_rounds = args.rounds or (20 if args.smoke else N_ROUNDS)
+    if args.tp > 1 and args.layout != "mesh":
+        ap.error("--tp requires --layout mesh")
 
     if args.layout == "mesh":
         from repro.launch.mesh import devices_error
-        err = devices_error(K)
+        err = devices_error(K * args.tp,
+                            context=f"--layout mesh --tp {args.tp}")
         if err:
             print(f"FAIL: {err}", file=sys.stderr)
             return 2
     algorithms = ("proposed", "fedgan")   # both layouts run both
 
-    results = {alg: bench_pair(alg, n_rounds, args.layout)
+    results = {alg: bench_pair(alg, n_rounds, args.layout, args.tp)
                for alg in algorithms}
-    write_json(args.json, args.layout, results, n_rounds)
+    write_json(args.json, args.layout, args.tp, results, n_rounds)
 
     status = 0
     for alg, r in results.items():
         s = r["speedup"]
+        lk = layout_key(args.layout, args.tp)
         if args.smoke and s < 1.2:
-            print(f"FAIL: {args.layout}/{alg} fused speedup {s:.2f}x "
+            print(f"FAIL: {lk}/{alg} fused speedup {s:.2f}x "
                   f"below the 1.2x smoke threshold", file=sys.stderr)
             status = 2
         elif s < 2.0:
-            print(f"WARNING: {args.layout}/{alg} fused speedup {s:.2f}x "
+            print(f"WARNING: {lk}/{alg} fused speedup {s:.2f}x "
                   f"below the 2x target", file=sys.stderr)
     return status
 

@@ -38,6 +38,32 @@ def bench_wavg():
     emit_csv_row("wavg_ref_16x1M_f32", us, f"host_GB_s={gbps:.1f}")
 
 
+def bench_wavg_pallas():
+    """The ACTUAL mesh-round hot path: the Pallas `wavg` kernel on a
+    flat (K, N) payload — what `weighted_average_psum(impl="pallas")`
+    reduces every round after its one all-gather. On this CPU container
+    it runs in interpret mode (Python), so the payload is kept modest
+    (64 BLOCK_N tiles) and the wall-time is a correctness/regression
+    microbench, not a TPU roofline — but BENCH output now tracks the
+    code path the mesh engine executes, alongside the jnp reference."""
+    from repro.kernels.wavg import ops as wavg_ops
+    from repro.kernels.wavg.kernel import BLOCK_N
+    k, n = 16, 64 * BLOCK_N
+    x = jax.random.normal(KEY, (k, n))
+    w = jnp.full((k,), 1.0 / k)
+    f = jax.jit(lambda x, w: wavg_ops.weighted_average(x, w))
+    # pin correctness against the reference while we're here
+    ref = jnp.einsum("k,kn->n", w, x)
+    got = f(x, w)
+    import numpy as np
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=1e-4)
+    us = timeit(f, x, w, iters=3)
+    gbps = k * n * 4 / (us / 1e6) / 1e9
+    emit_csv_row(f"wavg_pallas_16x{64 * BLOCK_N // 1024}k_f32", us,
+                 f"host_GB_s={gbps:.2f};interpret=cpu")
+
+
 def bench_ssd():
     from repro.nn.ssm import ssd_scan_ref
     b, s, h, p, n = 1, 2048, 8, 64, 64
@@ -91,6 +117,7 @@ def bench_protocol_round():
 
 def main():
     bench_wavg()
+    bench_wavg_pallas()
     bench_ssd()
     bench_flash()
     bench_protocol_round()

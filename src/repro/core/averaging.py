@@ -55,6 +55,13 @@ def weighted_average_psum(local_params, local_weight, *, axis_names,
     """shard_map path: every mesh slice holds ITS device's parameters;
     Algorithm 2 is a weighted reduction over the device axes.
 
+    `axis_names` may be a SUBSET of the live mesh axes: on the 2-D
+    (device x model) mesh the reduction runs over the device axes only,
+    so each tensor-parallel rank averages just its parameter shard —
+    the all-gather payload shrinks by the TP factor and the result
+    stays sharded over the model axis
+    (tests/test_averaging_property.py::TestAxisSubsetAveraging).
+
     impl="jnp"    — per-leaf weighted psum (one collective per leaf).
     impl="pallas" — the mesh hot path: the local tree is flattened into
         ONE contiguous f32 payload, all-gathered over the device axes

@@ -23,7 +23,18 @@ EXECUTION LAYOUT — how the paper's K devices map onto hardware:
       kernel per round (both nets in ONE payload for FedGAN), and any
       server math is replicated shared-seed computation. Requires >= K
       addressable devices (pass `mesh=` or let the Trainer build a
-      (K, 1) host mesh).
+      (K, tp) host mesh). With `tp > 1` the mesh is 2-D
+      (device x model): each paper-worker slice is a TP group running
+      Megatron column/row-parallel matmuls with in-slice collectives on
+      the `model` axis (the spec must be built TP-aware, e.g.
+      `models.gan.mlp_gan_spec(tp_axis="model")` /
+      `make_backbone_spec(tp_axis="model")`), while scheduling, channel
+      timing, uplink keying, and the Algorithm-2 reduction stay on the
+      device axes — each TP rank averages just its parameter shard.
+      State, checkpoints, and histories stay GLOBAL-shaped (shard_map
+      splits/reassembles), so checkpoints interoperate across tp
+      widths. tp > 1 requires layout="mesh" (stacked TP is the GSPMD
+      path through launch/steps.py).
 
 DRIVER — how rounds are dispatched:
 
@@ -89,7 +100,8 @@ class _Algorithm:
     make_state: Callable          # (key, init_fn, pcfg, n_devices) -> state
     round_fn: Callable            # (spec, pcfg) -> (s, d, w, k) -> (s, m)
     rounds_scan: Optional[Callable] = None   # unified stacked engine entry
-    mesh_round: Optional[Callable] = None    # (spec, pcfg, mesh, device_axes)
+    mesh_round: Optional[Callable] = None    # (spec, pcfg, mesh,
+    #                                  device_axes=, tp_axis=, tp=)
     mesh_rounds_scan: Optional[Callable] = None  # fused mesh engine entry
     fedgan: bool = False
     pooled: bool = False          # centralized: pools the data shards
@@ -169,7 +181,7 @@ class Trainer:
                  channel_cfg: Optional[ChannelConfig] = None,
                  disc_step_flops: float = 1e9, gen_step_flops: float = 1e9,
                  driver: str = "auto", layout: str = "stacked",
-                 mesh=None, device_axes=("data",)):
+                 mesh=None, device_axes=("data",), tp: int = 1):
         if algorithm not in _ALGORITHMS:
             raise ValueError(f"unknown algorithm {algorithm!r} "
                              f"(have {tuple(_ALGORITHMS)})")
@@ -181,6 +193,31 @@ class Trainer:
                 f"layout='mesh' is not supported for algorithm "
                 f"{algorithm!r} (mesh algorithms: {MESH_ALGORITHMS}); "
                 f"use layout='stacked'")
+        if tp < 1:
+            raise ValueError(f"tp must be >= 1 (got {tp})")
+        if tp > 1 and layout != "mesh":
+            raise ValueError(
+                f"tp={tp} requires layout='mesh' (in-slice tensor "
+                f"parallelism is the 2-D shard_map engine; on the "
+                f"stacked layout TP comes from GSPMD through "
+                f"launch/steps.py)")
+        # The spec's TP-awareness must match the engine's: a dense spec
+        # consumes sharded params shape-consistently but never psums
+        # the partial products — silently wrong, so refuse up front.
+        spec_tp_axis = getattr(spec, "tp_axis", None)
+        want_tp_axis = "model" if tp > 1 else None
+        if layout == "mesh" and spec_tp_axis != want_tp_axis:
+            raise ValueError(
+                f"tp={tp} needs a spec built with "
+                f"tp_axis={want_tp_axis!r}, got tp_axis="
+                f"{spec_tp_axis!r} — rebuild it (e.g. "
+                f"make_backbone_spec(tp_axis=...) / "
+                f"mlp_gan_spec(tp_axis=...))")
+        if layout != "mesh" and spec_tp_axis is not None:
+            raise ValueError(
+                f"spec was built with tp_axis={spec_tp_axis!r} (in-slice "
+                f"collectives) but layout={layout!r} runs no shard_map; "
+                f"rebuild the spec with tp_axis=None")
         if driver not in ("auto", "fused", "host"):
             raise ValueError(f"unknown driver {driver!r}")
         if driver == "fused" and not algo.fused:
@@ -212,14 +249,22 @@ class Trainer:
                 lambda x: x.reshape((-1,) + x.shape[2:]), data_stacked)
 
         self.device_axes = device_axes
+        self.tp = tp
+        self.tp_axis = "model" if tp > 1 else None
         self.mesh = None
         if layout == "mesh":
             if mesh is None:
                 from repro.launch.mesh import make_host_mesh
-                mesh = make_host_mesh(pcfg.n_devices, 1)
+                mesh = make_host_mesh(pcfg.n_devices, tp)
+            else:
+                from repro.launch.mesh import tp_mesh_error
+                err = tp_mesh_error(mesh, tp)
+                if err:
+                    raise ValueError(err)
             self.mesh = mesh
             self._round = algo.mesh_round(spec, pcfg, mesh,
-                                          device_axes=device_axes)
+                                          device_axes=device_axes,
+                                          tp_axis=self.tp_axis, tp=tp)
         else:
             self._round = jax.jit(algo.round_fn(spec, pcfg))
 
@@ -283,7 +328,8 @@ class Trainer:
                 disc_step_flops=self.disc_step_flops,
                 gen_step_flops=self.gen_step_flops,
                 uplink_bits=self._uplink_bits,
-                eval_fn=eval_fn, eval_every=eval_every)
+                eval_fn=eval_fn, eval_every=eval_every,
+                tp_axis=self.tp_axis, tp=self.tp)
         else:
             scan = self._algo.rounds_scan
 

@@ -98,12 +98,22 @@ class GanModelSpec:
     gen_apply(gen_params, z)         -> fake data batch
     disc_real(disc_params, batch)    -> logits (n,) on real data
     disc_fake(disc_params, fake)     -> logits (n,) on generated data
+
+    tp_axis: set by TP-aware builders (`make_backbone_spec(tp_axis=)`,
+    `gan.mlp_gan_spec(tp_axis=)`) when the apply functions contain
+    in-slice Megatron collectives over that manual mesh axis — the
+    params they receive must then be model-axis SHARDS. The mesh
+    engine validates this against its own tp setting
+    (`engine.Trainer(tp=)`), because a mismatch computes silently
+    wrong results: a dense spec consumes shards shape-consistently but
+    never psums the partial products.
     """
     sample_z: Callable
     gen_apply: Callable
     disc_real: Callable
     disc_fake: Callable
     gen_loss_variant: str = "minimax"
+    tp_axis: Optional[str] = None
 
 
 def make_train_state(key, init_fn, pcfg: ProtocolConfig, n_devices: int):

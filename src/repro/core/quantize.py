@@ -24,6 +24,18 @@ import jax.numpy as jnp
 _SALT_QUANT = 0x0b175
 
 
+def _quantize_leaf(x, rnd, amax, levels):
+    """One leaf's uniform stochastic quantization: (q_int32, scale).
+    The ONE definition of the scale floor / rounding / clip math —
+    `quantize_tree` and `roundtrip_tp` both call it, so the tp-bitwise
+    contract (TP width never changes the quantizer) cannot drift."""
+    scale = jnp.maximum(amax, 1e-12) / levels
+    scaled = x / scale
+    low = jnp.floor(scaled)
+    q = low + (rnd < scaled - low)
+    return jnp.clip(q, -levels - 1, levels).astype(jnp.int32), scale
+
+
 def quantize_tree(key, tree, bits: int = 16):
     """Returns (quantized_int_tree, scales_tree).
 
@@ -42,12 +54,8 @@ def quantize_tree(key, tree, bits: int = 16):
     for x, size in zip(leaves, sizes):
         rnd = rnd_flat[off:off + size].reshape(x.shape)
         off += size
-        scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / levels
-        scaled = x / scale
-        low = jnp.floor(scaled)
-        p_up = scaled - low
-        q = low + (rnd < p_up)
-        q_leaves.append(jnp.clip(q, -levels - 1, levels).astype(jnp.int32))
+        q, scale = _quantize_leaf(x, rnd, jnp.max(jnp.abs(x)), levels)
+        q_leaves.append(q)
         scales.append(scale)
     return (jax.tree_util.tree_unflatten(treedef, q_leaves),
             jax.tree_util.tree_unflatten(treedef, scales))
@@ -65,6 +73,73 @@ def roundtrip(key, tree, bits: int = 16):
     q, s = quantize_tree(key, tree, bits)
     deq = dequantize_tree(q, s)
     return jax.tree.map(lambda d, x: d.astype(x.dtype), deq, tree)
+
+
+def roundtrip_tp(key, tree, bits: int = 16, *, tp_axis=None, tp: int = 1,
+                 shard_dims=None):
+    """`roundtrip` for a TENSOR-PARALLEL shard of the upload payload.
+
+    Inside a (device x model) mesh slice each TP rank holds only its
+    Megatron shard of `tree`, but the paper's worker quantizes the WHOLE
+    model with one stream. This reconstructs exactly that: the
+    stochastic-rounding uniforms are drawn over the GLOBAL flattened
+    payload (same key, same draw order as `roundtrip` at tp=1) and each
+    rank slices its shard's positions; the per-tensor scale comes from
+    the GLOBAL abs-max via `lax.pmax` over the model axis. A tp=2 run
+    therefore quantizes bitwise-identically to tp=1 given the same
+    values — TP changes the arithmetic only through matmul reduction
+    order, never through the quantizer.
+
+    shard_dims: per-leaf shard dim (negative) or None, as a tuple
+    aligned with `tree_flatten(tree)` order — produced by
+    `sharding.rules.tp_tree_dims` on the GLOBAL payload tree. Leaves
+    with None replicate: every rank quantizes the full leaf with the
+    same slice of the stream, staying replicated.
+
+    KNOWN LIMITATION: reconstructing the worker-global stream means
+    each rank materializes O(global payload) uniforms (rnd_flat + one
+    global-shaped buffer per leaf) transiently during Step 3 — the
+    quantizer's peak memory does NOT shrink with tp, only the persistent
+    state and the Algorithm-2 all-gather do. That is the price of the
+    tp-bitwise contract (tp must never change the quantizer); a
+    counter-level sliced stream that keeps the contract without the
+    global buffer is a ROADMAP item.
+    """
+    if bits >= 32:
+        return tree
+    if tp_axis is None or tp <= 1:
+        return roundtrip(key, tree, bits)
+    levels = 2 ** (bits - 1) - 1
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    assert shard_dims is not None and len(shard_dims) == len(leaves)
+    rank = jax.lax.axis_index(tp_axis)
+
+    # Global shapes/sizes: the sharded dim is tp x its local extent.
+    gshapes = []
+    for x, d in zip(leaves, shard_dims):
+        shape = list(x.shape)
+        if d is not None:
+            shape[d] = shape[d] * tp
+        gshapes.append(tuple(shape))
+    gsizes = [1 for _ in gshapes]
+    for i, shape in enumerate(gshapes):
+        for s in shape:
+            gsizes[i] *= s
+    rnd_flat = jax.random.uniform(key, (sum(gsizes),))
+
+    out, off = [], 0
+    for x, d, gshape, gsize in zip(leaves, shard_dims, gshapes, gsizes):
+        rnd = rnd_flat[off:off + gsize].reshape(gshape)
+        off += gsize
+        amax = jnp.max(jnp.abs(x))
+        if d is not None:
+            start = [0] * x.ndim
+            start[d % x.ndim] = rank * x.shape[d]
+            rnd = jax.lax.dynamic_slice(rnd, start, x.shape)
+            amax = jax.lax.pmax(amax, tp_axis)
+        q, scale = _quantize_leaf(x, rnd, amax, levels)
+        out.append((q.astype(jnp.float32) * scale).astype(x.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
 
 
 def device_uplink_key(round_key, dev_index):

@@ -51,6 +51,19 @@ def devices_error(n: int, context: str = "--layout mesh"):
             f"XLA_FLAGS=--xla_force_host_platform_device_count={n})")
 
 
+def tp_mesh_error(mesh, tp: int):
+    """The shared tp-vs-mesh contract: in-slice tensor parallelism of
+    width `tp` needs a 'model' axis of exactly that size. Returns the
+    actionable message, or None when the mesh satisfies it — the ONE
+    definition `core.engine.Trainer` and `launch.steps` both check."""
+    if tp <= 1:
+        return None
+    if "model" not in mesh.axis_names or mesh.shape["model"] != tp:
+        return (f"tp={tp} needs a mesh with a 'model' axis of size {tp} "
+                f"(got axes {mesh.axis_names} shape {dict(mesh.shape)})")
+    return None
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)

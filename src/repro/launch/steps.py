@@ -76,7 +76,8 @@ def build_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
                      act_disc_spec: Optional[object] = "default",
                      fuse_rounds: int = 1,
                      layout: str = "stacked",
-                     algorithm: str = "proposed"):
+                     algorithm: str = "proposed",
+                     tp: Optional[int] = None):
     """The protocol round as the pod-scale train step, on either
     execution layout.
 
@@ -102,10 +103,16 @@ def build_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
         `core.shard_round.shard_rounds_scan` (algorithm="proposed") or
         `core.shard_round.fedgan_shard_rounds_scan`
         (algorithm="fedgan": per-device joint D+G local iterations, the
-        two-net uplink payload, both networks averaged). Tensor-parallel
-        (model axis) sharding within a slice is not applied on this
-        layout yet — params replicate over `model`; the stacked layout
-        remains the TP path. Returns (step, (state, sched_carry,
+        two-net uplink payload, both networks averaged). With `tp > 1`
+        (default: inferred from the mesh's `model` axis) each worker
+        slice is a TENSOR-PARALLEL group: the backbone's feed-forward
+        blocks run Megatron column/row-parallel with in-slice
+        collectives on the `model` axis (make_backbone_spec(tp_axis=),
+        sharding.rules.tp_leaf_dim name rules), the state enters
+        shard_map split over `model`, and each TP rank averages just
+        its parameter shard — the Algorithm-2 all-gather payload
+        shrinks by the TP factor. tp=1 replicates the model axis
+        (exactly the pre-TP engine). Returns (step, (state, sched_carry,
         tokens, key, start_round)); step(...) -> (state, sched_carry,
         out) where out stacks per-round metrics/wallclock_s/mask/
         weights. Encoder-fed families (encdec/vlm) are not supported on
@@ -139,9 +146,14 @@ def build_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
     enc = needs_enc(cfg)
     if layout == "mesh":
         return _build_mesh_train_step(cfg, shape, mesh, plan, pcfg,
-                                      fuse_rounds, algorithm)
+                                      fuse_rounds, algorithm, tp)
     if layout != "stacked":
         raise ValueError(f"unknown layout {layout!r}")
+    if tp not in (None, 1):
+        raise ValueError(
+            f"tp={tp} applies to layout='mesh' only; on the stacked "
+            f"layout tensor parallelism comes from the mesh's 'model' "
+            f"axis through GSPMD (rules.param_specs)")
     if algorithm != "proposed":
         raise ValueError(
             f"build_train_step(layout='stacked') runs the proposed "
@@ -222,10 +234,13 @@ def build_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
 
 def _build_mesh_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh, plan,
                            pcfg: ProtocolConfig, fuse_rounds: int,
-                           algorithm: str = "proposed"):
+                           algorithm: str = "proposed",
+                           tp: Optional[int] = None):
     """layout="mesh" of `build_train_step`: `fuse_rounds` complete rounds
     per dispatch inside shard_map, state + scheduler carry donated.
-    algorithm selects the per-slice round body (proposed | fedgan)."""
+    algorithm selects the per-slice round body (proposed | fedgan);
+    tp > 1 (default: the mesh's `model` axis size) runs each worker
+    slice as a Megatron TP group over that axis."""
     from repro.core.channel import ChannelConfig
     from repro.core.engine import mesh_algorithm
     from repro.core.jax_channel import JaxChannel
@@ -241,16 +256,27 @@ def _build_mesh_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh, plan,
     assert shape.global_batch % k_dev == 0
     n_k = shape.global_batch // k_dev
     seq = shape.seq_len
+    if tp is None:
+        tp = mesh.shape["model"] if "model" in mesh.axis_names else 1
+    else:
+        from repro.launch.mesh import tp_mesh_error
+        err = tp_mesh_error(mesh, tp)
+        if err:
+            raise ValueError(err)
+    tp_axis = plan.tp_axis if tp > 1 else None
 
     # act specs are GSPMD sharding constraints — inside shard_map the
-    # device axes are manual, so the spec-free backbone is used.
-    spec = make_backbone_spec(cfg, seq, dtype=COMPUTE_DTYPE)
+    # device axes are manual, so the spec-free backbone is used; under
+    # tp > 1 the spec's feed-forward math is Megatron-parallel over the
+    # model axis instead.
+    spec = make_backbone_spec(cfg, seq, dtype=COMPUTE_DTYPE,
+                              tp_axis=tp_axis)
     channel = JaxChannel(ChannelConfig(n_devices=k_dev))
     scheduler = JaxScheduler(policy=pcfg.scheduler, n_devices=k_dev,
                              ratio=pcfg.scheduling_ratio)
     step = rounds_scan(spec, pcfg, mesh, max(1, fuse_rounds),
                        channel=channel, scheduler=scheduler,
-                       device_axes=plan.dev_axes)
+                       device_axes=plan.dev_axes, tp_axis=tp_axis, tp=tp)
 
     def init_fn(key):
         return gan_model.gan_init(key, cfg)

@@ -7,14 +7,24 @@ device count to exercise either mesh path end-to-end:
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     PYTHONPATH=src python -m repro.launch.train --arch mamba2-130m \
-        --data-dim 8 --model-dim 1 --rounds 4 --seq-len 64 --batch 32 \
+        --data-dim 8 --rounds 4 --seq-len 64 --batch 32 \
         --layout mesh --fuse-rounds 2
 
 Execution layouts (see launch/steps.build_train_step):
 
-  --layout stacked  GSPMD/pjit rounds, device axis sharded (default)
+  --layout stacked  GSPMD/pjit rounds, device axis sharded (default);
+                    --model-dim is the GSPMD tensor-parallel axis
   --layout mesh     shard_map rounds with explicit collectives; the
-                    fused multi-round scan runs INSIDE shard_map
+                    fused multi-round scan runs INSIDE shard_map. The
+                    mesh is (data x model) = (--data-dim x --tp): with
+                    --tp > 1 every worker slice is a Megatron TP group
+                    on the model axis (feed-forward column/row-parallel,
+                    state sharded, Algorithm-2 all-gather payload 1/tp
+                    per rank); --tp 1 replicates the model axis exactly
+                    like the pre-TP engine. Needs data_dim x tp
+                    addressable devices. Checkpoints stay GLOBAL-shaped
+                    regardless of --tp (shard_map splits/reassembles),
+                    so --resume works across TP widths.
 
 Both layouts chunk `--rounds` into `--fuse-rounds`-sized dispatches with
 the state DONATED across chunks; any round count works — the remainder
@@ -110,7 +120,22 @@ def main():
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--batch", type=int, default=32)
     ap.add_argument("--data-dim", type=int, default=4)
-    ap.add_argument("--model-dim", type=int, default=2)
+    ap.add_argument("--model-dim", type=int, default=None,
+                    help="GSPMD model axis, layout stacked only "
+                         "(default 2); the mesh layout's model axis "
+                         "comes from --tp instead — passing both "
+                         "--layout mesh and --model-dim is an error "
+                         "rather than a silent reinterpretation")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="layout mesh only: in-slice tensor parallelism "
+                         "— every paper-worker slice is a TP group of "
+                         "this width on the 'model' axis (Megatron "
+                         "column/row-parallel feed-forward, state "
+                         "sharded over model, per-rank Algorithm-2 "
+                         "payload 1/tp). 1 = replicate the model axis "
+                         "(identical to the pre-TP engine). Checkpoints "
+                         "are global-shaped, so --resume works across "
+                         "--tp widths")
     ap.add_argument("--schedule", choices=["serial", "parallel"],
                     default="serial")
     ap.add_argument("--layout", choices=["stacked", "mesh"],
@@ -146,6 +171,15 @@ def main():
                  "builder (stacked FedGAN runs through core.engine.Trainer)")
     if args.resume and not args.ckpt_dir:
         ap.error("--resume requires --ckpt-dir")
+    if args.tp < 1:
+        ap.error("--tp must be >= 1")
+    if args.tp > 1 and args.layout != "mesh":
+        ap.error("--tp applies to --layout mesh (stacked tensor "
+                 "parallelism is --model-dim through GSPMD)")
+    if args.layout == "mesh" and args.model_dim is not None:
+        ap.error("--model-dim applies to --layout stacked; the mesh "
+                 "layout's model axis is --tp (refusing to silently "
+                 "reinterpret the mesh shape)")
 
     if args.distributed:
         jax.distributed.initialize()
@@ -153,7 +187,11 @@ def main():
     cfg = get_arch_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    mesh = make_mesh((args.data_dim, args.model_dim), ("data", "model"))
+    # stacked: (data x model) GSPMD mesh; mesh layout: the model axis IS
+    # the in-slice TP width (--tp), every (data, model) slice one rank.
+    model_dim = (args.tp if args.layout == "mesh"
+                 else (2 if args.model_dim is None else args.model_dim))
+    mesh = make_mesh((args.data_dim, model_dim), ("data", "model"))
     mesh_cfg = MeshConfig()
     shape = ShapeConfig("train_cli", args.seq_len, args.batch, "train")
 
@@ -167,6 +205,7 @@ def main():
                 cfg, shape, mesh, mesh_cfg, schedule=args.schedule,
                 fuse_rounds=length, layout=args.layout,
                 algorithm=args.algorithm,
+                tp=args.tp if args.layout == "mesh" else None,
                 pcfg_overrides={"quantize_bits": args.quantize_bits})
         return step_cache[length]
 
@@ -199,6 +238,8 @@ def main():
     if args.resume:
         from repro.checkpoint import load_checkpoint
         tree, step_idx, meta = load_checkpoint(args.ckpt_dir)
+        # NOTE: tp is deliberately NOT checked — checkpoints are
+        # global-shaped, so a run may resume at a different TP width.
         for field, want in (("algorithm", args.algorithm),
                             ("layout", args.layout)):
             got = meta.get(field)
@@ -286,14 +327,16 @@ def main():
                 # next chunk runs on the donated live buffers
                 ckpt.submit(r, ckpt_tree(state),
                             metadata={"layout": args.layout,
-                                      "algorithm": args.algorithm})
+                                      "algorithm": args.algorithm,
+                                      "tp": args.tp})
                 since_ckpt = 0
 
     if ckpt:
         ckpt.finish()
         ckpt.submit(args.rounds, ckpt_tree(state),
                     metadata={"layout": args.layout,
-                              "algorithm": args.algorithm})
+                              "algorithm": args.algorithm,
+                              "tp": args.tp})
         ckpt.finish()
         print(f"saved {args.ckpt_dir}")
 

@@ -182,7 +182,8 @@ def _kv_to_cache(kv, positions, window, cache_len: int):
 
 def _run_sublayer(params_i, cfg: ArchConfig, kind: str, h, *, inv_freq,
                   positions, cache, cache_index, enc_h, shared_params,
-                  mode: str, cache_len: int = 0, ssd_scan_impl=None):
+                  mode: str, cache_len: int = 0, ssd_scan_impl=None,
+                  tp_axis=None):
     """Dispatch one sublayer. Returns (h, aux, new_cache_or_None)."""
     if kind in ("attn", "attn_local", "attn_global", "shared_attn"):
         p = shared_params if kind == "shared_attn" else params_i
@@ -192,10 +193,11 @@ def _run_sublayer(params_i, cfg: ArchConfig, kind: str, h, *, inv_freq,
             return blocks.attn_layer_apply(
                 p, cfg, h, window=window, inv_freq=inv_freq,
                 positions=positions, cache=cache, cache_index=cache_index,
-                moe_dropless=dropless)
+                moe_dropless=dropless, tp_axis=tp_axis)
         h, aux, kv = blocks.attn_layer_apply(
             p, cfg, h, window=window, inv_freq=inv_freq, positions=positions,
-            return_kv=(mode == "prefill"), moe_dropless=dropless)
+            return_kv=(mode == "prefill"), moe_dropless=dropless,
+            tp_axis=tp_axis)
         new_cache = None
         if mode == "prefill":
             new_cache = _kv_to_cache(kv, positions, window, cache_len)
@@ -210,10 +212,11 @@ def _run_sublayer(params_i, cfg: ArchConfig, kind: str, h, *, inv_freq,
         gated = cfg.family == "vlm"
         if mode == "decode":
             h, aux, _ = blocks.cross_layer_apply(
-                params_i, cfg, h, enc_kv=cache, gated=gated)
+                params_i, cfg, h, enc_kv=cache, gated=gated,
+                tp_axis=tp_axis)
             return h, aux, cache
         h, aux, kv = blocks.cross_layer_apply(
-            params_i, cfg, h, enc_h=enc_h, gated=gated)
+            params_i, cfg, h, enc_h=enc_h, gated=gated, tp_axis=tp_axis)
         return h, aux, (kv if mode == "prefill" else None)
     raise ValueError(kind)
 
@@ -221,13 +224,18 @@ def _run_sublayer(params_i, cfg: ArchConfig, kind: str, h, *, inv_freq,
 def backbone_apply(params, cfg: ArchConfig, h, *, mode: str = "train",
                    caches=None, cache_index=None, positions=None,
                    enc_h=None, remat: bool = True, ssd_scan_impl=None,
-                   prefill_cache_len: Optional[int] = None, act_spec=None):
+                   prefill_cache_len: Optional[int] = None, act_spec=None,
+                   tp_axis=None):
     """Run the backbone.
 
     h: (b, s, d) hidden states (already embedded / projected).
     mode: "train" | "prefill" | "decode".
     caches/cache_index: decode state (see init_decode_caches).
     enc_h: encoder or image embeddings for cross sublayers.
+    tp_axis: Megatron tensor parallelism of the dense feed-forward
+        blocks over a manual (shard_map) mesh axis — `params` then hold
+        the model-axis SHARDS of w_in/w_gate/w_out (sharding.rules
+        tp_leaf_dim); attention/norms/embeds/ssm/moe replicate.
     Returns dict(h=..., aux=..., caches=...).
     """
     pattern = cfg.group_pattern
@@ -266,7 +274,8 @@ def backbone_apply(params, cfg: ArchConfig, h, *, mode: str = "train",
                 params_g[f"sub{i}"], cfg, kind, h, inv_freq=inv_freq,
                 positions=positions, cache=cache_i, cache_index=cache_index,
                 enc_h=enc_h, shared_params=shared_params, mode=mode,
-                cache_len=cache_len, ssd_scan_impl=ssd_scan_impl)
+                cache_len=cache_len, ssd_scan_impl=ssd_scan_impl,
+                tp_axis=tp_axis)
             aux = aux + aux_i
             if new_cache_i is not None:
                 new_caches[f"sub{i}"] = new_cache_i

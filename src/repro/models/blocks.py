@@ -56,8 +56,10 @@ def attn_layer_init(key, cfg: ArchConfig, *, causal: bool = True):
 def attn_layer_apply(params, cfg: ArchConfig, h, *, window: Optional[int],
                      inv_freq, positions, causal: bool = True,
                      cache=None, cache_index=None, return_kv: bool = False,
-                     moe_dropless: bool = False):
-    """Returns (h, aux_loss, new_cache_or_kv)."""
+                     moe_dropless: bool = False, tp_axis=None):
+    """Returns (h, aux_loss, new_cache_or_kv). tp_axis runs the dense
+    feed-forward Megatron-style inside a shard_map slice (attention and
+    MoE replicate over the model axis)."""
     x = _norm_apply(cfg, params["ln_attn"], h)
     out = nn.attention_apply(
         params["attn"], x, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
@@ -79,7 +81,7 @@ def attn_layer_apply(params, cfg: ArchConfig, h, *, window: Optional[int],
             group_size=cfg.moe.group_size, dispatch=cfg.moe.dispatch,
             dropless=moe_dropless)
     else:
-        ff_out = nn.mlp_apply(params["ff"], x)
+        ff_out = nn.mlp_apply(params["ff"], x, tp_axis=tp_axis)
     h = h + ff_out
     return h, aux, new_cache
 
@@ -106,7 +108,7 @@ def cross_layer_init(key, cfg: ArchConfig, *, gated: bool):
 
 
 def cross_layer_apply(params, cfg: ArchConfig, h, *, enc_h=None,
-                      enc_kv=None, gated: bool):
+                      enc_kv=None, gated: bool, tp_axis=None):
     """Cross-attend to encoder/image states.
 
     enc_h: (b, t, d) raw encoder states (train/prefill) — k/v projected here.
@@ -132,7 +134,7 @@ def cross_layer_apply(params, cfg: ArchConfig, h, *, enc_h=None,
     aux = jnp.zeros((), dtype=jnp.float32)
     if gated:
         x = _norm_apply(cfg, params["ln_ff"], h)
-        ff_out = nn.mlp_apply(params["ff"], x)
+        ff_out = nn.mlp_apply(params["ff"], x, tp_axis=tp_axis)
         h = h + jnp.tanh(params["gate_ff"]).astype(h.dtype) * ff_out
     return h, aux, kv_out
 

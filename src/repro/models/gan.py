@@ -55,12 +55,18 @@ def generator_init(key, cfg: ArchConfig):
 
 
 def generator_apply(params, cfg: ArchConfig, z, *, enc_feats=None,
-                    remat: bool = True, act_spec=None):
-    """GAN mode: noise sequence -> synthetic embedding sequence (b, s, d)."""
+                    remat: bool = True, act_spec=None, tp_axis=None):
+    """GAN mode: noise sequence -> synthetic embedding sequence (b, s, d).
+
+    tp_axis: run the backbone's feed-forward blocks Megatron-style over
+    a manual mesh axis (`params` hold the model-axis shards; the
+    projections here stay replicated). See backbone_apply.
+    """
     h = z @ params["z_proj"].astype(z.dtype)
     enc_h = _encode(params, cfg, enc_feats, remat=remat)
     out = backbone_apply(params["backbone"], cfg, h, mode="train",
-                         enc_h=enc_h, remat=remat, act_spec=act_spec)
+                         enc_h=enc_h, remat=remat, act_spec=act_spec,
+                         tp_axis=tp_axis)
     fake = out["h"] @ params["out_proj"].astype(h.dtype)
     return fake, out["aux"]
 
@@ -123,14 +129,15 @@ def discriminator_embed(params, tokens):
 
 
 def discriminator_apply(params, cfg: ArchConfig, x_embed, *, enc_feats=None,
-                        remat: bool = True, act_spec=None):
+                        remat: bool = True, act_spec=None, tp_axis=None):
     """x_embed: (b, s, d) — real (embedded tokens) or fake (generator out).
-    Returns per-example logits (b,)."""
+    Returns per-example logits (b,). tp_axis as in generator_apply."""
     dcfg = disc_config(cfg)
     h = x_embed @ params["in_proj"].astype(x_embed.dtype)
     enc_h = _encode(params, dcfg, enc_feats, remat=remat)
     out = backbone_apply(params["backbone"], dcfg, h, mode="train",
-                         enc_h=enc_h, remat=remat, act_spec=act_spec)
+                         enc_h=enc_h, remat=remat, act_spec=act_spec,
+                         tp_axis=tp_axis)
     pooled = jnp.mean(out["h"].astype(jnp.float32), axis=1)
     logit = pooled @ params["score"].astype(jnp.float32)
     return logit[..., 0], out["aux"]
@@ -139,3 +146,54 @@ def discriminator_apply(params, cfg: ArchConfig, x_embed, *, enc_feats=None,
 def gan_init(key, cfg: ArchConfig):
     kg, kd = jax.random.split(key)
     return {"gen": generator_init(kg, cfg), "disc": discriminator_init(kd, cfg)}
+
+
+# ---------------------------------------------------------------------------
+# Minimal MLP-GAN — the TP reference model
+# ---------------------------------------------------------------------------
+
+def mlp_gan_init(key, *, d_z: int = 8, d_hidden: int = 16, d_data: int = 64,
+                 w_scale: float = 0.1):
+    """Two-layer MLP G and D over flattened vectors, with the
+    column/row-parallel leaf names (`w_in`/`w_out` — sharding.rules
+    tp_leaf_dim) so the SAME parameter tree runs unsharded (tp=1, the
+    host oracle) or Megatron-sharded inside a mesh slice. This is the
+    dispatch-bound model `benchmarks/driver_bench.py` measures and the
+    model the TP equivalence matrix pins."""
+    ks = jax.random.split(key, 4)
+    s = lambda k, sh: jax.random.normal(k, sh) * w_scale
+    return {"gen": {"w_in": s(ks[0], (d_z, d_hidden)),
+                    "w_out": s(ks[1], (d_hidden, d_data))},
+            "disc": {"w_in": s(ks[2], (d_data, d_hidden)),
+                     "w_out": s(ks[3], (d_hidden, 1))}}
+
+
+def mlp_gan_spec(*, d_z: int = 8, tp_axis=None):
+    """GanModelSpec for the MLP-GAN (see `core.protocol.GanModelSpec`).
+
+    tp_axis=None is the plain dense math (any layout, any driver). With
+    tp_axis set the spec must run inside shard_map with that axis live:
+    w_in is column-parallel (copy_to_tp pins the backward dx psum),
+    w_out row-parallel (one forward psum), for both networks — the
+    Megatron pattern over shards the engine's state specs carve out.
+    """
+    from repro.core.protocol import GanModelSpec
+    from repro.nn.linear import linear_apply
+
+    def gen_apply(p, z):
+        h = jnp.tanh(linear_apply({"w": p["w_in"]}, z, tp_axis=tp_axis,
+                                  tp_mode="column"))
+        return jnp.tanh(linear_apply({"w": p["w_out"]}, h, tp_axis=tp_axis,
+                                     tp_mode="row"))
+
+    def disc_logits(p, x):
+        x = x.reshape(x.shape[0], -1)
+        h = jnp.tanh(linear_apply({"w": p["w_in"]}, x, tp_axis=tp_axis,
+                                  tp_mode="column"))
+        return linear_apply({"w": p["w_out"]}, h, tp_axis=tp_axis,
+                            tp_mode="row")[:, 0]
+
+    return GanModelSpec(
+        sample_z=lambda key, n: jax.random.normal(key, (n, d_z)),
+        gen_apply=gen_apply, disc_real=disc_logits,
+        disc_fake=disc_logits, tp_axis=tp_axis)

@@ -29,14 +29,37 @@ def make_backbone_spec(cfg: ArchConfig, seq_len: int, *,
                        enc_feats_fn=None, remat: bool = True,
                        gen_loss_variant: str = "minimax",
                        act_spec_gen=None, act_spec_disc=None,
-                       dtype=jnp.float32) -> GanModelSpec:
+                       dtype=jnp.float32, tp_axis=None) -> GanModelSpec:
     """Backbone-GAN over token data.
 
     Real batches are token arrays (m, seq_len); they enter the
     discriminator through its embedding table. Fakes are generator
     embedding sequences (m, seq_len, d). Conditioned families get their
     stub frontend features from enc_feats_fn(n) (deterministic stub).
+
+    tp_axis: Megatron tensor parallelism of BOTH nets' feed-forward
+    blocks over a manual (shard_map) mesh axis — the params passed to
+    the apply functions must then be the model-axis shards
+    (sharding.rules tp_leaf_dim names). Mutually exclusive with the
+    GSPMD act specs (those constrain a global program; tp_axis is the
+    explicit-collective slice program). fuse_proj configs cannot TP
+    (the fused [in|gate] halves don't shard contiguously).
     """
+    if tp_axis is not None:
+        assert act_spec_gen is None and act_spec_disc is None, \
+            "tp_axis is the shard_map path; GSPMD act specs don't apply"
+        if cfg.fuse_proj:
+            raise ValueError(
+                f"{cfg.name}: fuse_proj=True cannot be tensor-parallel "
+                f"(fused [in|gate] halves don't shard contiguously); "
+                f"use a non-fused config for tp > 1")
+        if cfg.moe is not None:
+            raise ValueError(
+                f"{cfg.name}: MoE feed-forward has no in-slice TP path "
+                f"yet (moe_apply runs dense per expert; expert "
+                f"parallelism is a ROADMAP item) — use tp=1 for MoE "
+                f"configs on the mesh layout")
+
     def enc(n):
         return enc_feats_fn(n) if enc_feats_fn is not None else None
 
@@ -49,25 +72,27 @@ def make_backbone_spec(cfg: ArchConfig, seq_len: int, *,
         fake, _aux = gan_model.generator_apply(gen, cfg, z,
                                                enc_feats=enc(z.shape[0]),
                                                remat=remat,
-                                               act_spec=act_spec_gen)
+                                               act_spec=act_spec_gen,
+                                               tp_axis=tp_axis)
         return fake
 
     def disc_real(disc, tokens):
         x = gan_model.discriminator_embed(disc, tokens)
         logits, _aux = gan_model.discriminator_apply(
             disc, cfg, x, enc_feats=enc(tokens.shape[0]), remat=remat,
-            act_spec=act_spec_disc)
+            act_spec=act_spec_disc, tp_axis=tp_axis)
         return logits
 
     def disc_fake(disc, fake):
         logits, _aux = gan_model.discriminator_apply(
             disc, cfg, fake, enc_feats=enc(fake.shape[0]), remat=remat,
-            act_spec=act_spec_disc)
+            act_spec=act_spec_disc, tp_axis=tp_axis)
         return logits
 
     return GanModelSpec(sample_z=sample_z, gen_apply=gen_apply,
                         disc_real=disc_real, disc_fake=disc_fake,
-                        gen_loss_variant=gen_loss_variant)
+                        gen_loss_variant=gen_loss_variant,
+                        tp_axis=tp_axis)
 
 
 def make_stub_enc_feats(cfg: ArchConfig, *, seed: int = 7):

@@ -11,6 +11,7 @@ directly.
 """
 from repro.nn import initializers
 from repro.nn.linear import linear_init, linear_apply
+from repro.nn.tp import copy_to_tp, gather_from_tp, reduce_from_tp, tp_rank
 from repro.nn.norms import (
     rmsnorm_init,
     rmsnorm_apply,

@@ -1,10 +1,25 @@
-"""Dense projection."""
+"""Dense projection, with Megatron column/row-parallel modes.
+
+`tp_mode` selects how a TP-sharded weight shard participates inside a
+shard_map slice (see nn/tp.py for the collective pairs):
+
+  "column" — w shard = a slice of the OUTPUT dim. Input is replicated
+      (copy_to_tp pins the backward dx all-reduce); output stays
+      sharded unless gather_output=True all-gathers it back.
+  "row"    — w shard = a slice of the INPUT dim. Input arrives sharded
+      (the preceding column layer's output); the partial products are
+      psum'd (reduce_from_tp) and the replicated bias is added AFTER
+      the reduction, exactly matching the unsharded matmul.
+
+With tp_axis=None both modes degrade to the plain dense projection.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
 import jax
 
 from repro.nn import initializers
+from repro.nn.tp import copy_to_tp, gather_from_tp, reduce_from_tp
 
 
 def linear_init(key, d_in: int, d_out: int, *, use_bias: bool = True,
@@ -16,7 +31,23 @@ def linear_init(key, d_in: int, d_out: int, *, use_bias: bool = True,
     return params
 
 
-def linear_apply(params, x):
+def linear_apply(params, x, *, tp_axis=None, tp_mode=None,
+                 gather_output: bool = False):
+    if tp_axis is not None and tp_mode == "row":
+        y = reduce_from_tp(x @ params["w"].astype(x.dtype), tp_axis)
+        if "b" in params:
+            y = y + params["b"].astype(x.dtype)
+        return y
+    if tp_axis is not None and tp_mode == "column":
+        y = copy_to_tp(x, tp_axis) @ params["w"].astype(x.dtype)
+        if "b" in params:
+            y = y + params["b"].astype(x.dtype)   # bias shard, output-dim
+        if gather_output:
+            y = gather_from_tp(y, tp_axis, dim=-1)
+        return y
+    if tp_axis is not None:
+        raise ValueError(f"tp_mode must be 'column' or 'row' with a "
+                         f"tp_axis (got {tp_mode!r})")
     y = x @ params["w"].astype(x.dtype)
     if "b" in params:
         y = y + params["b"].astype(x.dtype)

@@ -1,10 +1,22 @@
-"""Feed-forward blocks: SwiGLU (LLM default) and GELU (whisper)."""
+"""Feed-forward blocks: SwiGLU (LLM default) and GELU (whisper).
+
+`mlp_apply(tp_axis=...)` runs the block Megatron-style inside a
+shard_map slice: w_in / w_gate (and b_in) hold a d_ff shard
+(column-parallel), w_out holds the matching input-dim shard
+(row-parallel), and ONE psum (`reduce_from_tp`) closes the block —
+the replicated b_out is added after the reduction, so the result
+matches the unsharded block to f32 round-off. The fused [in | gate]
+layout (`w_inga`) interleaves both halves on one output dim, which a
+contiguous model-axis shard would split across the in/gate boundary —
+fused configs therefore reject tp_axis (use fuse_gate=False for TP).
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 from repro.nn import initializers
+from repro.nn.tp import copy_to_tp, reduce_from_tp
 
 
 def mlp_init(key, d_model: int, d_ff: int, *, gated: bool = True,
@@ -35,22 +47,28 @@ def mlp_init(key, d_model: int, d_ff: int, *, gated: bool = True,
     return params
 
 
-def mlp_apply(params, x):
+def mlp_apply(params, x, *, tp_axis=None):
     if "w_inga" in params:
+        if tp_axis is not None:
+            raise ValueError(
+                "fused [in|gate] (fuse_gate=True) cannot be tensor-parallel:"
+                " a contiguous model-axis shard of w_inga would split the"
+                " in/gate halves; init with fuse_gate=False for TP")
         fused = x @ params["w_inga"].astype(x.dtype)
         if "b_inga" in params:
             fused = fused + params["b_inga"].astype(x.dtype)
         d_ff = fused.shape[-1] // 2
         h = jax.nn.silu(fused[..., d_ff:]) * fused[..., :d_ff]
     else:
-        h = x @ params["w_in"].astype(x.dtype)
+        xt = copy_to_tp(x, tp_axis)
+        h = xt @ params["w_in"].astype(x.dtype)
         if "b_in" in params:
             h = h + params["b_in"].astype(x.dtype)
         if "w_gate" in params:
-            h = jax.nn.silu(x @ params["w_gate"].astype(x.dtype)) * h
+            h = jax.nn.silu(xt @ params["w_gate"].astype(x.dtype)) * h
         else:
             h = jax.nn.gelu(h)
-    y = h @ params["w_out"].astype(x.dtype)
+    y = reduce_from_tp(h @ params["w_out"].astype(x.dtype), tp_axis)
     if "b_out" in params:
         y = y + params["b_out"].astype(x.dtype)
     return y

@@ -196,6 +196,89 @@ def enc_feats_spec(cfg: ArchConfig, mesh, plan: ParallelismPlan):
 # shard_map (mesh-layout) specs — explicit-collective protocol rounds
 # ---------------------------------------------------------------------------
 
+# In-slice tensor parallelism (the mesh layout's `model` axis): which
+# leaf NAMES carry a Megatron shard, and on which dim. Column-parallel
+# weights (and their biases) shard the output dim; row-parallel weights
+# shard the input dim. Negative dims make the same rule cover plain
+# params, optimizer moments (same leaf names under m/v/mu), and
+# device-stacked trees (the leading K axis shifts positive indices but
+# not negative ones). Leaves with other names (attention, norms, convs,
+# embeds, ssm) replicate over the model axis — and so does EVERYTHING
+# under an "experts" subtree: MoE experts reuse the mlp leaf names but
+# `moe_apply` has no in-slice collectives, so sharding them would
+# silently drop the cross-rank reduction (expert parallelism is an
+# open ROADMAP item; `make_backbone_spec` rejects moe + tp_axis).
+# TP-named leaves whose dim tp doesn't divide are an ERROR, not a
+# replication fallback — see tp_leaf_dim.
+_TP_COL = {"w_in", "w_gate", "b_in"}      # output-dim shard
+_TP_ROW = {"w_out"}                       # input-dim shard
+_TP_REPLICATED_SUBTREES = {"experts"}
+
+
+def tp_leaf_dim(name: str, shape, tp: int):
+    """The model-axis shard dim of one leaf (negative), or None when the
+    leaf replicates by name.
+
+    A TP-NAMED leaf whose shard dim `tp` doesn't divide RAISES instead
+    of silently replicating: unlike the GSPMD rules above (where the
+    compiler inserts the collectives, so replication is a safe
+    fallback), the manual Megatron apply path psums unconditionally —
+    a replicated leaf would have its outputs inflated by exactly tp.
+    """
+    if tp <= 1:
+        return None
+    if name in _TP_COL and len(shape) >= 1:
+        dim = -1
+    elif name in _TP_ROW and len(shape) >= 2:
+        dim = -2
+    else:
+        return None
+    if shape[dim] % tp != 0:
+        raise ValueError(
+            f"tensor-parallel leaf {name!r} {tuple(shape)}: shard dim "
+            f"{shape[dim]} is not divisible by tp={tp} — the Megatron "
+            f"apply path would psum un-sharded products (outputs x{tp}); "
+            f"pick a divisible width or a different tp")
+    return dim
+
+
+def _tp_path_dim(path_names, shape, tp: int):
+    """`tp_leaf_dim` with the leaf's PATH context: any leaf under a
+    replicated subtree (MoE experts) stays replicated regardless of
+    its name."""
+    if any(n in _TP_REPLICATED_SUBTREES for n in path_names):
+        return None
+    name = path_names[-1] if path_names else ""
+    return tp_leaf_dim(name, shape, tp)
+
+
+def tp_tree_dims(tree, tp: int):
+    """Shard dims for every leaf of `tree`, as a tuple aligned with
+    `jax.tree_util.tree_flatten(tree)` order (None entries don't
+    survive a pytree, so the aligned-tuple form is the contract —
+    `quantize.roundtrip_tp` consumes it the same way).
+
+    IMPORTANT: call this on GLOBAL-shaped trees. Divisibility is
+    decided on the global dim; deciding it again on local shards could
+    disagree (e.g. global 6 % 2 == 0 but local 3 % 2 != 0).
+    """
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    dims = []
+    for path, leaf in flat:
+        names = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
+        dims.append(_tp_path_dim(names, leaf.shape, tp))
+    return tuple(dims)
+
+
+def tp_local_size(tree, tp: int) -> int:
+    """Per-TP-rank element count of `tree` (global): sharded leaves
+    contribute size/tp — the Algorithm-2 all-gather payload per slice."""
+    flat = jax.tree_util.tree_leaves(tree)
+    dims = tp_tree_dims(tree, tp)
+    return sum(int(x.size) // (tp if d is not None else 1)
+               for x, d in zip(flat, dims))
+
+
 def tree_specs(tree, spec_leaf: P):
     """Broadcast one PartitionSpec over every leaf of `tree` (None leaves
     included, as optimizer states may carry them)."""
@@ -203,17 +286,55 @@ def tree_specs(tree, spec_leaf: P):
                         is_leaf=lambda x: x is None)
 
 
+def _tp_entry_specs(tree, device_axes, stacked: bool, tp_axis: str,
+                    tp: int):
+    """Per-leaf specs for ONE TrainState entry with in-slice TP: the
+    model axis lands on the leaf's shard dim, the device axes on dim 0
+    of stacked entries."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: x is None)
+    specs = []
+    for path, leaf in flat:
+        if leaf is None:
+            specs.append(P())
+            continue
+        names = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
+        ndim = len(leaf.shape)
+        dim = _tp_path_dim(names, leaf.shape, tp)
+        entries = [None] * ndim
+        if stacked and ndim >= 1:
+            entries[0] = _norm(device_axes)
+        if dim is not None:
+            entries[ndim + dim] = tp_axis
+        while entries and entries[-1] is None:   # P(None) != P() on 0.4.x
+            entries.pop()
+        specs.append(P(*entries))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
 def shard_round_state_specs(state, device_axes,
-                            stacked_keys=("disc_opt",)) -> dict:
+                            stacked_keys=("disc_opt",),
+                            tp_axis=None, tp: int = 1) -> dict:
     """shard_map in/out specs for a TrainState under the mesh layout.
 
     Entries in `stacked_keys` carry a leading K axis stacked over the
     device axes (each slice IS one of the paper's K devices); the rest
-    replicate (the server is shared-seed replicated computation).
-    Proposed protocol: only `disc_opt` is per-device. FedGAN: both
-    optimizer states are per-device (`gen_opt` AND `disc_opt`), since
-    every device trains a local generator too.
+    replicate over the device axes (the server is shared-seed replicated
+    computation). Proposed protocol: only `disc_opt` is per-device.
+    FedGAN: both optimizer states are per-device (`gen_opt` AND
+    `disc_opt`), since every device trains a local generator too.
+
+    With `tp_axis`/`tp` set (the 2-D device x model mesh), TP-shardable
+    leaves additionally carry the model axis on their Megatron shard dim
+    (`tp_leaf_dim` name rules) in EVERY entry — params, opt moments, and
+    stacked trees alike — so shard_map splits/reassembles the global
+    state and each slice sees only its parameter shard. Call with the
+    GLOBAL state (divisibility is decided on global dims).
     """
+    if tp_axis is not None and tp > 1:
+        return {k: _tp_entry_specs(v, device_axes, k in stacked_keys,
+                                   tp_axis, tp)
+                for k, v in state.items()}
     stacked, rep = P(device_axes), P()
     return {k: tree_specs(v, stacked if k in stacked_keys else rep)
             for k, v in state.items()}

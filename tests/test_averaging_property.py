@@ -204,3 +204,103 @@ class TestPallasAveragingSeeded:
     def test_unknown_impl_raises(self):
         with pytest.raises(ValueError, match="impl"):
             run_impl(*make_case(7), "warp")
+
+
+class TestAxisSubsetAveraging:
+    """`weighted_average_psum` over a SUBSET of the live axes — the 2-D
+    (device x model) mesh's Algorithm 2: psum/all_gather on the device
+    axis ONLY while a `model` axis is live, so each TP rank averages
+    just its parameter shard. Nested `jax.vmap` axis names stand in for
+    the 2-D mesh (the real shard_map execution is pinned by
+    tests/test_tp_equivalence.py)."""
+
+    MODEL = "model"
+
+    def run_subset(self, tree_km, weights_k, impl):
+        """tree_km leaves: (K, TP, n) — device axis K, model axis TP.
+        Reduce over the device axis only; weights replicate over model.
+        Returns the (K, TP, n) output (replicated over K per model
+        rank)."""
+        def slice_fn(t, w):
+            return weighted_average_psum(t, w, axis_names=AXIS, impl=impl)
+
+        # outer vmap = device axis K (named AXIS), inner = model axis TP:
+        # after the outer slice a leaf is (TP, n), so the inner maps dim 0
+        inner = jax.vmap(slice_fn, in_axes=(0, None),
+                         axis_name=self.MODEL)
+        return jax.vmap(inner, axis_name=AXIS)(tree_km, weights_k)
+
+    def make_2d_case(self, seed, *, k=4, tp=2, sizes=None):
+        rng = np.random.default_rng(seed)
+        if sizes is None:
+            sizes = [int(rng.integers(1, 200))
+                     for _ in range(int(rng.integers(1, 4)))]
+        tree = {f"leaf{i}": jnp.asarray(
+                    rng.standard_normal((k, tp, n)) * rng.uniform(0.1, 4.0),
+                    jnp.float32)
+                for i, n in enumerate(sizes)}
+        w = jnp.asarray(rng.uniform(0.0, 5.0, k), jnp.float32)
+        w = jnp.where(jnp.asarray(rng.uniform(size=k) < 0.3), 0.0, w)
+        return tree, w
+
+    def reference(self, tree_km, weights_k):
+        """Per-model-rank weighted mean over the device axis in numpy."""
+        w = np.asarray(weights_k, np.float64)
+        wn = w / max(w.sum(), 1e-12)
+
+        def avg(x):
+            x = np.asarray(x, np.float64)
+            out = np.einsum("k,ktn->tn", wn, x)
+            return np.broadcast_to(out[None], x.shape)
+
+        return {name: avg(leaf) for name, leaf in tree_km.items()}
+
+    @pytest.mark.parametrize("impl", ["jnp", "pallas"])
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_device_axis_subset_reduction(self, impl, seed):
+        tree, w = self.make_2d_case(seed)
+        out = self.run_subset(tree, w, impl)
+        ref = self.reference(tree, w)
+        for name in tree:
+            np.testing.assert_allclose(np.asarray(out[name], np.float32),
+                                       ref[name].astype(np.float32),
+                                       atol=1e-5)
+
+    @pytest.mark.parametrize("impl", ["jnp", "pallas"])
+    def test_model_ranks_stay_independent(self, impl):
+        """Different shards per model rank must NOT mix: the reduction
+        touches the device axis only (a ("k", "model") reduction would
+        collapse the model dim — the bug this pins against)."""
+        tree, w = self.make_2d_case(3, k=3, tp=2, sizes=[17])
+        out = self.run_subset(tree, w, impl)
+        leaf = np.asarray(out["leaf0"], np.float32)
+        # model rank 0 and 1 averaged DIFFERENT shards
+        assert np.abs(leaf[:, 0] - leaf[:, 1]).max() > 1e-6
+        ref = self.reference(tree, w)
+        np.testing.assert_allclose(leaf, ref["leaf0"].astype(np.float32),
+                                   atol=1e-5)
+
+    @pytest.mark.parametrize("impl", ["jnp", "pallas"])
+    @pytest.mark.parametrize("blocks", [1, 2])
+    def test_block_edge_payloads_under_live_model_axis(self, impl,
+                                                      blocks):
+        """BLOCK_N-edge payloads through the kernel wrapper's padded
+        tail slice, with the model axis live."""
+        rng = np.random.default_rng(blocks)
+        tree, w = self.make_2d_case(5, sizes=block_edge_sizes(rng, blocks))
+        out = self.run_subset(tree, w, impl)
+        ref = self.reference(tree, w)
+        for name in tree:
+            np.testing.assert_allclose(np.asarray(out[name], np.float32),
+                                       ref[name].astype(np.float32),
+                                       atol=1e-5)
+
+    def test_pallas_matches_jnp_on_subset(self):
+        tree, w = self.make_2d_case(8)
+        a = self.run_subset(tree, w, "pallas")
+        b = self.run_subset(tree, w, "jnp")
+        for x, y in zip(jax.tree_util.tree_leaves(a),
+                        jax.tree_util.tree_leaves(b)):
+            np.testing.assert_allclose(np.asarray(x, np.float32),
+                                       np.asarray(y, np.float32),
+                                       atol=1e-5)

@@ -247,6 +247,80 @@ class TestMeshLayoutSelection:
             assert algo.mesh_rounds_scan is not None
 
 
+class TestShardRoundBuilderMemo:
+    """The shard_map builders memoize on their full (mesh, config)
+    signature, so repeated Trainer constructions in one process reuse
+    the jitted closures (and their compiles) instead of rebuilding per
+    call. A 1x1 host mesh suffices — construction only."""
+
+    def _args(self):
+        from repro.launch.mesh import make_host_mesh
+        pcfg = ProtocolConfig(n_devices=1, n_d=1, n_g=1, sample_size=2,
+                              server_sample_size=2)
+        return SPEC, pcfg, make_host_mesh(1, 1)
+
+    def test_single_round_builders_memoize(self):
+        from repro.core import shard_round
+        spec, pcfg, mesh = self._args()
+        a = shard_round.shard_map_round(spec, pcfg, mesh)
+        b = shard_round.shard_map_round(spec, pcfg, mesh)
+        assert a is b
+        c = shard_round.fedgan_shard_map_round(spec, pcfg, mesh)
+        assert c is shard_round.fedgan_shard_map_round(spec, pcfg, mesh)
+        assert c is not a
+
+    def test_scan_builders_memoize_and_key_on_config(self):
+        import dataclasses as dc
+        from repro.core import shard_round
+        from repro.core.jax_channel import JaxChannel
+        from repro.core.jax_scheduling import JaxScheduler
+        spec, pcfg, mesh = self._args()
+        chan_cfg = ChannelConfig(n_devices=1, seed=3)
+        sched = JaxScheduler(policy="all", n_devices=1)
+        kw = dict(channel=JaxChannel(chan_cfg), scheduler=sched)
+        a = shard_round.shard_rounds_scan(spec, pcfg, mesh, 2, **kw)
+        # a DIFFERENT JaxChannel instance with an EQUAL config still hits
+        b = shard_round.shard_rounds_scan(spec, pcfg, mesh, 2,
+                                          channel=JaxChannel(chan_cfg),
+                                          scheduler=sched)
+        assert a is b
+        # any config change misses: round count, pcfg, channel config
+        assert shard_round.shard_rounds_scan(spec, pcfg, mesh, 3,
+                                             **kw) is not a
+        pcfg2 = dc.replace(pcfg, quantize_bits=8)
+        assert shard_round.shard_rounds_scan(spec, pcfg2, mesh, 2,
+                                             **kw) is not a
+        chan2 = JaxChannel(ChannelConfig(n_devices=1, seed=4))
+        assert shard_round.shard_rounds_scan(spec, pcfg, mesh, 2,
+                                             channel=chan2,
+                                             scheduler=sched) is not a
+
+    def test_eval_fn_closures_never_memoized(self):
+        from repro.core import shard_round
+        from repro.core.jax_channel import JaxChannel
+        from repro.core.jax_scheduling import JaxScheduler
+        spec, pcfg, mesh = self._args()
+        kw = dict(channel=JaxChannel(ChannelConfig(n_devices=1, seed=3)),
+                  scheduler=JaxScheduler(policy="all", n_devices=1),
+                  eval_fn=lambda g, t, k: 0.0, eval_every=2)
+        a = shard_round.shard_rounds_scan(spec, pcfg, mesh, 2, **kw)
+        assert shard_round.shard_rounds_scan(spec, pcfg, mesh, 2,
+                                             **kw) is not a
+
+    def test_memoized_trainer_reuses_mesh_round(self):
+        """Two Trainers sharing spec/pcfg/mesh config reuse ONE mesh
+        round builder — the satellite's actual target."""
+        pcfg = ProtocolConfig(n_devices=1, n_d=1, n_g=1, sample_size=2,
+                              server_sample_size=2)
+        data = DATA[:1]
+        chan = ChannelConfig(n_devices=1, seed=3)
+        ta = Trainer(SPEC, pcfg, lambda k: dcgan.gan_init(k, CFG), data,
+                     KEY, channel_cfg=chan, driver="host", layout="mesh")
+        tb = Trainer(SPEC, pcfg, lambda k: dcgan.gan_init(k, CFG), data,
+                     KEY, channel_cfg=chan, driver="host", layout="mesh")
+        assert ta._round is tb._round
+
+
 class TestMeshFusedEquivalence:
     """Satellite: the FULL layout x algorithm matrix — mesh-fused vs
     stacked-fused vs host oracle, for BOTH the proposed protocol and

@@ -176,3 +176,66 @@ class TestQuantizeSeeded:
                 {"w": stacked["w"][i]}, bits)
             np.testing.assert_array_equal(np.asarray(out["w"][i]),
                                           np.asarray(ref["w"]))
+
+
+class TestRoundtripTp:
+    """`roundtrip_tp`: a TP shard must quantize BITWISE like its slice
+    of the full-tensor `roundtrip` — same global stream, same
+    pmax-global scale — so TP width never changes the quantizer."""
+
+    AXIS = "model"
+
+    def _shard(self, tree, dims, tp):
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        out = []
+        for x, d in zip(leaves, dims):
+            if d is None:
+                out.append(jnp.broadcast_to(x[None], (tp,) + x.shape))
+            else:
+                out.append(jnp.stack(jnp.split(x, tp, axis=d % x.ndim)))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    @pytest.mark.parametrize("bits", [8, 16])
+    @pytest.mark.parametrize("tp", [2, 4])
+    def test_matches_full_roundtrip_slice_bitwise(self, bits, tp):
+        from repro.sharding import rules
+        tree = {"w_in": jax.random.normal(KEY, (8, 16)),
+                "w_out": jax.random.normal(jax.random.fold_in(KEY, 1),
+                                           (16, 12)),
+                "ln": jax.random.normal(jax.random.fold_in(KEY, 2), (9,))}
+        dims = rules.tp_tree_dims(tree, tp)
+        assert dims == (None, -1, -2)   # ln replicated; w_in col; w_out row
+        sharded = self._shard(tree, dims, tp)
+        key = jax.random.fold_in(KEY, 3)
+        full = self._shard(quantize.roundtrip(key, tree, bits), dims, tp)
+        got = jax.vmap(
+            lambda t: quantize.roundtrip_tp(key, t, bits,
+                                            tp_axis=self.AXIS, tp=tp,
+                                            shard_dims=dims),
+            axis_name=self.AXIS)(sharded)
+        for a, b in zip(jax.tree_util.tree_leaves(got),
+                        jax.tree_util.tree_leaves(full)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_tp1_and_high_bits_pass_through(self):
+        tree = {"w_in": jax.random.normal(KEY, (4, 8))}
+        out = quantize.roundtrip_tp(KEY, tree, 16, tp_axis=None, tp=1,
+                                    shard_dims=None)
+        ref = quantize.roundtrip(KEY, tree, 16)
+        np.testing.assert_array_equal(np.asarray(out["w_in"]),
+                                      np.asarray(ref["w_in"]))
+        out32 = quantize.roundtrip_tp(KEY, tree, 32, tp_axis="model",
+                                      tp=2, shard_dims=(None,))
+        assert out32 is tree
+
+    def test_replicated_leaves_stay_replicated(self):
+        """A leaf the name rules replicate must come back IDENTICAL on
+        every rank (same stream slice, same local scale)."""
+        tree = {"ln": jax.random.normal(KEY, (11,))}
+        sharded = self._shard(tree, (None,), 2)
+        out = jax.vmap(
+            lambda t: quantize.roundtrip_tp(KEY, t, 8, tp_axis=self.AXIS,
+                                            tp=2, shard_dims=(None,)),
+            axis_name=self.AXIS)(sharded)
+        np.testing.assert_array_equal(np.asarray(out["ln"][0]),
+                                      np.asarray(out["ln"][1]))

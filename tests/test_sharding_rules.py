@@ -90,3 +90,96 @@ def test_state_specs_cover_train_state():
     # structure must match exactly (same treedef)
     jax.tree.map(lambda a, b: None, state, specs,
                  is_leaf=lambda x: isinstance(x, (P, jax.ShapeDtypeStruct)))
+
+
+# ---------------------------------------------------------------------------
+# In-slice tensor parallelism (the mesh layout's model axis)
+# ---------------------------------------------------------------------------
+
+class TestTpRules:
+    def test_tp_leaf_dim_roles(self):
+        assert rules.tp_leaf_dim("w_in", (8, 16), 2) == -1
+        assert rules.tp_leaf_dim("w_gate", (8, 16), 2) == -1
+        assert rules.tp_leaf_dim("b_in", (16,), 2) == -1
+        assert rules.tp_leaf_dim("w_out", (16, 8), 2) == -2
+        assert rules.tp_leaf_dim("table", (100, 16), 2) is None
+        assert rules.tp_leaf_dim("wq", (16, 16), 2) is None
+
+    def test_tp_leaf_dim_indivisible_raises(self):
+        """The manual Megatron path psums unconditionally, so a
+        replication fallback would inflate outputs by exactly tp —
+        indivisible TP-named dims must be a hard error."""
+        with pytest.raises(ValueError, match="divisible"):
+            rules.tp_leaf_dim("w_in", (8, 15), 2)
+        with pytest.raises(ValueError, match="divisible"):
+            rules.tp_leaf_dim("w_out", (15, 8), 2)
+        assert rules.tp_leaf_dim("w_in", (8, 16), 1) is None  # tp=1 ok
+        # non-TP names never raise, whatever their shape
+        assert rules.tp_leaf_dim("wq", (8, 15), 2) is None
+
+    def test_tp_tree_dims_aligned_and_stacked_safe(self):
+        tree = {"w_in": jnp.zeros((8, 16)), "w_out": jnp.zeros((16, 8)),
+                "ln": jnp.zeros((8,))}
+        dims = rules.tp_tree_dims(tree, 2)
+        flat_names = [p[-1].key for p, _ in
+                      jax.tree_util.tree_flatten_with_path(tree)[0]]
+        got = dict(zip(flat_names, dims))
+        assert got == {"w_in": -1, "w_out": -2, "ln": None}
+        # negative dims survive a leading stacked K axis unchanged
+        stacked = jax.tree.map(lambda x: jnp.zeros((4,) + x.shape), tree)
+        assert rules.tp_tree_dims(stacked, 2) == dims
+
+    def test_tp_local_size(self):
+        tree = {"w_in": jnp.zeros((8, 16)), "ln": jnp.zeros((10,))}
+        assert rules.tp_local_size(tree, 2) == 8 * 16 // 2 + 10
+        assert rules.tp_local_size(tree, 1) == 8 * 16 + 10
+
+    def test_shard_round_state_specs_tp(self):
+        state = {
+            "disc": {"w_in": jnp.zeros((8, 16)), "ln": jnp.zeros((8,))},
+            "disc_opt": {"m": {"w_out": jnp.zeros((4, 16, 8))},
+                         "t": jnp.zeros((4,))},
+        }
+        specs = rules.shard_round_state_specs(
+            state, ("data",), stacked_keys=("disc_opt",),
+            tp_axis="model", tp=2)
+        assert specs["disc"]["w_in"] == P(None, "model")
+        assert specs["disc"]["ln"] == P()
+        # stacked opt moment: data on the K axis, model on the TP dim
+        # (trailing None trimmed — P(None) != P() on jax 0.4.x)
+        assert specs["disc_opt"]["m"]["w_out"] == P("data", "model")
+        assert specs["disc_opt"]["t"] == P("data")
+
+    def test_shard_round_state_specs_tp1_unchanged(self):
+        state = {"disc": {"w_in": jnp.zeros((8, 16))},
+                 "disc_opt": {"w_in": jnp.zeros((4, 8, 16))}}
+        a = rules.shard_round_state_specs(state, ("data",))
+        b = rules.shard_round_state_specs(state, ("data",),
+                                          tp_axis=None, tp=1)
+        assert a == b
+        assert a["disc"]["w_in"] == P()
+        # legacy tp=1 form: the device-axes TUPLE in position 0
+        assert a["disc_opt"]["w_in"] == P(("data",))
+
+    def test_expert_subtrees_always_replicate(self):
+        """MoE experts reuse mlp leaf names but moe_apply has no TP
+        collectives — anything under an `experts` subtree must stay
+        replicated, whatever its leaf name."""
+        tree = {"ff": {"router": jnp.zeros((8, 4)),
+                       "experts": {"w_in": jnp.zeros((4, 8, 16)),
+                                   "w_gate": jnp.zeros((4, 8, 16)),
+                                   "w_out": jnp.zeros((4, 16, 8))}},
+                "w_in": jnp.zeros((8, 16))}
+        dims = rules.tp_tree_dims(tree, 2)
+        flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+        got = {"/".join(p.key for p in path): d
+               for (path, _), d in zip(flat, dims)}
+        assert got["ff/experts/w_in"] is None
+        assert got["ff/experts/w_gate"] is None
+        assert got["ff/experts/w_out"] is None
+        assert got["w_in"] == -1        # non-expert mlp leaf still shards
+        specs = rules.shard_round_state_specs(
+            {"disc": tree}, ("data",), stacked_keys=(),
+            tp_axis="model", tp=2)
+        assert specs["disc"]["ff"]["experts"]["w_in"] == P()
+        assert specs["disc"]["w_in"] == P(None, "model")

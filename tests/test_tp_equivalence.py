@@ -1,0 +1,251 @@
+"""Tensor-parallel mesh slices: the 2-D (device x model) shard_map
+engine must preserve the paper's Algorithm 1/2 semantics on the device
+axis EXACTLY while Megatron-sharding the model axis inside each worker
+slice.
+
+Contract (ISSUE 5 acceptance; see core/shard_round.py docstring):
+
+  * tp=2 mesh-fused matches tp=1 mesh-fused AND the host oracle for
+    BOTH algorithms, over schedules x quantize-bits, on a forced
+    16-device host (8 data x 2 model): scheduling masks BITWISE, params
+    to f32 round-off. TP may only change matmul reduction order — the
+    uplink quantizer reconstructs the worker-global stream per shard
+    (quantize.roundtrip_tp), so quantization itself is bitwise-stable
+    across TP widths.
+  * tp=1 takes the exact pre-TP code paths (tp_axis=None throughout) —
+    pinned by the existing 8-device mesh matrix staying green.
+  * Checkpoints are GLOBAL-shaped at every tp (shard_map splits and
+    reassembles), so resume works across TP widths.
+
+The model is `models.gan.mlp_gan_spec` — the same two-layer MLP-GAN
+`benchmarks/driver_bench.py` measures — whose w_in/w_out leaves carry
+the column/row-parallel name rules of `sharding.rules.tp_leaf_dim`.
+Runs in CI's mesh-tp lane (16 forced host devices).
+"""
+import pytest
+
+from conftest import run_on_host_mesh
+
+# Params tolerance: f32 matmul-reduction round-off, amplified at 16-bit
+# quantization by at most one stochastic-rounding flip per element
+# (one quantum ~ absmax / 32767).
+_TP_MATRIX = """
+    import itertools, tempfile
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs.base import ProtocolConfig
+    from repro.core import Trainer
+    from repro.core.channel import ChannelConfig
+    from repro.models.gan import mlp_gan_init, mlp_gan_spec
+
+    KEY = jax.random.PRNGKey(0)
+    K, NZ, HIDDEN, DIM = 8, 8, 16, 64
+    DATA = jax.random.normal(jax.random.PRNGKey(9), (K, 8, DIM))
+    SPEC = {1: mlp_gan_spec(d_z=NZ, tp_axis=None),
+            2: mlp_gan_spec(d_z=NZ, tp_axis="model")}
+
+    def make(driver, layout, schedule, bits, algorithm, tp=1):
+        pcfg = ProtocolConfig(
+            n_devices=K, n_d=1, n_g=1, sample_size=4,
+            server_sample_size=4, lr_d=1e-3, lr_g=1e-3,
+            schedule=schedule, scheduler="round_robin",
+            scheduling_ratio=0.5, quantize_bits=bits)
+        chan = ChannelConfig(n_devices=K, seed=3, fading=False)
+        return Trainer(SPEC[tp], pcfg,
+                       lambda k: mlp_gan_init(k, d_z=NZ, d_hidden=HIDDEN,
+                                              d_data=DIM),
+                       DATA, KEY, channel_cfg=chan, driver=driver,
+                       layout=layout, algorithm=algorithm, tp=tp)
+
+    def leaves(t):
+        return jax.tree_util.tree_leaves(t.state)
+
+    for algorithm, schedule, bits in itertools.product(
+            ("proposed", "fedgan"), ("serial", "parallel"), (16, 32)):
+        th = make("host", "stacked", schedule, bits, algorithm)
+        t1 = make("fused", "mesh", schedule, bits, algorithm, tp=1)
+        t2 = make("fused", "mesh", schedule, bits, algorithm, tp=2)
+        h, m1, m2 = th.run(4), t1.run(4), t2.run(4)
+        for rh, r1, r2 in zip(h, m1, m2):
+            np.testing.assert_array_equal(rh.mask, r1.mask)
+            np.testing.assert_array_equal(rh.mask, r2.mask)   # bitwise
+            for k in rh.metrics:
+                assert abs(rh.metrics[k] - r2.metrics[k]) < 1e-4, \\
+                    (rh.round, k, rh.metrics[k], r2.metrics[k])
+            np.testing.assert_allclose(rh.wallclock_s, r2.wallclock_s,
+                                       rtol=1e-5)
+        atol = 5e-5 if bits < 32 else 2e-5
+        for a, b in zip(leaves(t1), leaves(t2)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       atol=atol)
+        for a, b in zip(leaves(th), leaves(t2)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       atol=atol)
+        print(f"tp matrix OK algorithm={algorithm} "
+              f"schedule={schedule} bits={bits}")
+
+    # per-round mesh dispatch (host driver) agrees at tp=2 too — one
+    # representative per algorithm
+    for algorithm in ("proposed", "fedgan"):
+        th = make("host", "stacked", "serial", 16, algorithm)
+        tm = make("host", "mesh", "serial", 16, algorithm, tp=2)
+        h, m = th.run(3), tm.run(3)
+        for rh, rm in zip(h, m):
+            np.testing.assert_array_equal(rh.mask, rm.mask)
+        for a, b in zip(leaves(th), leaves(tm)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       atol=5e-5)
+        print(f"tp mesh host driver OK algorithm={algorithm}")
+
+    # tp=2 resume continues masks, params, and the wallclock curve
+    # exactly; and a tp=1 checkpoint restores into a tp=2 trainer
+    # (checkpoints are GLOBAL-shaped at every tp)
+    for algorithm in ("proposed", "fedgan"):
+        d = tempfile.mkdtemp()
+        ta = make("fused", "mesh", "serial", 16, algorithm, tp=2)
+        ta.run(2)
+        ta.save_checkpoint(d)
+        tb = make("fused", "mesh", "serial", 16, algorithm, tp=2)
+        tb.restore(d)
+        tb.run(2)
+        tc = make("fused", "mesh", "serial", 16, algorithm, tp=2)
+        tc.run(4)
+        for a, b in zip(leaves(tb), leaves(tc)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert tb._clock == tc._clock
+        print(f"tp=2 resume OK algorithm={algorithm}")
+
+    d = tempfile.mkdtemp()
+    t1 = make("fused", "mesh", "serial", 16, "proposed", tp=1)
+    t1.run(2)
+    t1.save_checkpoint(d)
+    t2 = make("fused", "mesh", "serial", 16, "proposed", tp=2)
+    t2.restore(d)
+    t2.run(2)
+    t1.run(2)
+    for a, b in zip(leaves(t1), leaves(t2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=5e-5)
+    print("cross-tp restore OK (tp=1 checkpoint -> tp=2 run)")
+"""
+
+
+@pytest.mark.slow
+def test_tp2_matches_tp1_and_host_oracle_on_16_device_mesh():
+    """The FULL tp matrix in ONE 16-device subprocess (jax startup
+    dominates): both algorithms x schedules x bits, the per-round tp=2
+    oracle, tp=2 resume, and the cross-tp checkpoint restore."""
+    run_on_host_mesh(_TP_MATRIX, n_devices=16)
+
+
+class TestTpValidation:
+    """Fast-lane construction guards (no multi-device mesh needed)."""
+
+    def test_tp_requires_mesh_layout(self):
+        import jax
+        from repro.configs.base import ProtocolConfig
+        from repro.core import Trainer
+        from repro.models.gan import mlp_gan_init, mlp_gan_spec
+        data = jax.random.normal(jax.random.PRNGKey(0), (4, 8, 64))
+        with pytest.raises(ValueError, match="mesh"):
+            Trainer(mlp_gan_spec(), ProtocolConfig(n_devices=4),
+                    mlp_gan_init, data, jax.random.PRNGKey(0),
+                    layout="stacked", tp=2)
+
+    def test_tp_zero_rejected(self):
+        import jax
+        from repro.configs.base import ProtocolConfig
+        from repro.core import Trainer
+        from repro.models.gan import mlp_gan_init, mlp_gan_spec
+        data = jax.random.normal(jax.random.PRNGKey(0), (4, 8, 64))
+        with pytest.raises(ValueError, match="tp"):
+            Trainer(mlp_gan_spec(), ProtocolConfig(n_devices=4),
+                    mlp_gan_init, data, jax.random.PRNGKey(0),
+                    layout="mesh", tp=0)
+
+    def test_mesh_without_model_axis_rejected_for_tp(self):
+        import jax
+        from repro.configs.base import ProtocolConfig
+        from repro.core import Trainer
+        from repro.launch.mesh import make_mesh
+        from repro.models.gan import mlp_gan_init, mlp_gan_spec
+        mesh = make_mesh((1,), ("data",))
+        data = jax.random.normal(jax.random.PRNGKey(0), (1, 8, 64))
+        with pytest.raises(ValueError, match="model"):
+            Trainer(mlp_gan_spec(tp_axis="model"),
+                    ProtocolConfig(n_devices=1), mlp_gan_init, data,
+                    jax.random.PRNGKey(0), layout="mesh", tp=2,
+                    mesh=mesh)
+
+    def test_dense_spec_rejected_at_tp2(self):
+        """A spec without in-slice collectives consumes shards
+        shape-consistently but never psums — the engine must refuse the
+        mismatch instead of training silently wrong."""
+        import jax
+        from repro.configs.base import ProtocolConfig
+        from repro.core import Trainer
+        from repro.models.gan import mlp_gan_init, mlp_gan_spec
+        data = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 64))
+        with pytest.raises(ValueError, match="tp_axis"):
+            Trainer(mlp_gan_spec(tp_axis=None),
+                    ProtocolConfig(n_devices=2), mlp_gan_init, data,
+                    jax.random.PRNGKey(0), layout="mesh", tp=2)
+
+    def test_tp_spec_rejected_on_mesh_tp1_and_stacked(self):
+        import jax
+        from repro.configs.base import ProtocolConfig
+        from repro.core import Trainer
+        from repro.models.gan import mlp_gan_init, mlp_gan_spec
+        data = jax.random.normal(jax.random.PRNGKey(0), (1, 8, 64))
+        for kw in (dict(layout="mesh", tp=1), dict(layout="stacked")):
+            with pytest.raises(ValueError, match="tp_axis"):
+                Trainer(mlp_gan_spec(tp_axis="model"),
+                        ProtocolConfig(n_devices=1), mlp_gan_init, data,
+                        jax.random.PRNGKey(0), **kw)
+
+    def test_moe_backbone_rejects_tp(self):
+        """MoE experts reuse the mlp leaf names but moe_apply has no
+        in-slice collectives — the spec builder refuses TP for MoE
+        configs, and the rules replicate everything under `experts`."""
+        from repro.configs import get_arch_config
+        from repro.models.specs import make_backbone_spec
+        cfg = get_arch_config("mixtral-8x22b").reduced()
+        with pytest.raises(ValueError, match="MoE"):
+            make_backbone_spec(cfg, 16, tp_axis="model")
+
+    def test_in_scan_fid_rejected_under_tp(self):
+        """The in-slice generator is a shard under TP, so in-scan FID
+        must refuse instead of silently evaluating a shard."""
+        import jax
+        from repro.configs.base import ProtocolConfig
+        from repro.core import shard_round
+        from repro.core.channel import ChannelConfig
+        from repro.core.jax_channel import JaxChannel
+        from repro.core.jax_scheduling import JaxScheduler
+        from repro.launch.mesh import make_host_mesh
+        from repro.models.gan import mlp_gan_spec
+        with pytest.raises(NotImplementedError, match="FID"):
+            shard_round.shard_rounds_scan(
+                mlp_gan_spec(tp_axis="model"),
+                ProtocolConfig(n_devices=1), make_host_mesh(1, 1), 2,
+                channel=JaxChannel(ChannelConfig(n_devices=1)),
+                scheduler=JaxScheduler(policy="all", n_devices=1),
+                tp_axis="model", tp=2,
+                eval_fn=lambda g, t, k: 0.0, eval_every=2)
+
+    def test_allgather_payload_halves_at_tp2(self):
+        """The Algorithm-2 all-gather payload per TP rank is 1/tp of
+        the model for the fully-TP-shardable MLP-GAN (the driver_bench
+        allgather_bytes_per_rank column's invariant)."""
+        import jax
+        from repro.models.gan import mlp_gan_init
+        from repro.sharding import rules
+        state = mlp_gan_init(jax.random.PRNGKey(0))
+        full = sum(x.size
+                   for x in jax.tree_util.tree_leaves(state["disc"]))
+        assert rules.tp_local_size(state["disc"], 2) * 2 == full
+        two_net = {"gen": state["gen"], "disc": state["disc"]}
+        full2 = sum(x.size for x in jax.tree_util.tree_leaves(two_net))
+        assert rules.tp_local_size(two_net, 2) * 2 == full2
