@@ -92,7 +92,8 @@ def run_experiment(label: str, *, dataset="celeba", algorithm="proposed",
                    schedule="serial", k=10, scheduler="all", ratio=1.0,
                    rounds=None, seed=0, channel_kw=None,
                    gen_loss="nonsaturating", driver=None,
-                   bits=16, layout="stacked") -> Curve:
+                   bits=16, layout="stacked", faults=None,
+                   reducer=None) -> Curve:
     ds = dataset_for(dataset)
     cfg = dcgan_for(ds)
     spec = make_dcgan_spec(cfg, gen_loss_variant=gen_loss)
@@ -132,7 +133,8 @@ def run_experiment(label: str, *, dataset="celeba", algorithm="proposed",
                       algorithm=algorithm, channel_cfg=chan,
                       disc_step_flops=step_flops,
                       gen_step_flops=step_flops,
-                      driver=resolved_driver, layout=layout)
+                      driver=resolved_driver, layout=layout,
+                      faults=faults, reducer=reducer)
     hist = trainer.run(rounds or ROUNDS, eval_every=EVAL_EVERY,
                        fid_fn=fid_fn)
     return Curve(

@@ -17,11 +17,25 @@ Three interchangeable implementations:
     `wavg` kernel (the default inside `shard_round.shard_rounds_scan`)
   * the Pallas `wavg` kernel (repro.kernels.wavg) — the MXU reduction
     both ``impl="pallas"`` paths call into (interpret mode on CPU).
+
+ROBUST REDUCERS: ``impl`` may also name a robust aggregation method
+from `repro.kernels.robust_avg` (`ROBUST_METHODS`: "trimmed_mean",
+"norm_clip", "krum") with a `RobustConfig` supplying its parameters.
+They ride the SAME flatten -> one all-gather -> one Pallas kernel hot
+path as ``impl="pallas"`` but reduce with participation-mask-aware RAW
+weights (0 = dropped worker contributes nothing, payload shape
+unchanged) — the counter-measure to hostile uploads (core/faults.py).
+In their identity regimes (trim=0 / clip_factor large / krum_f=0) they
+reproduce the plain wavg weights bitwise.
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.robust_avg.ops import ROBUST_METHODS, RobustConfig
 
 
 def _normalized(weights):
@@ -30,11 +44,48 @@ def _normalized(weights):
     return weights / jnp.maximum(total, 1e-12)
 
 
-def weighted_average(stacked_params, weights, *, impl: str = "jnp"):
+def _flatten_stacked(stacked_params):
+    """Flatten a stacked pytree (leading axis K on every leaf) into one
+    (K, N) f32 matrix — the SAME leaf order and per-leaf ravel as the
+    psum path's per-slice concat, so stacked and mesh robust reductions
+    see identical payload columns."""
+    leaves, treedef = jax.tree_util.tree_flatten(stacked_params)
+    k = leaves[0].shape[0]
+    flat = jnp.concatenate(
+        [x.reshape(k, -1).astype(jnp.float32) for x in leaves], axis=1)
+    return flat, leaves, treedef
+
+
+def _unflatten_row(avg_flat, leaves, treedef):
+    out, off = [], 0
+    for x in leaves:
+        size = x.size // x.shape[0]
+        out.append(avg_flat[off:off + size].reshape(x.shape[1:])
+                   .astype(x.dtype))
+        off += size
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def weighted_average(stacked_params, weights, *, impl: str = "jnp",
+                     robust: Optional[RobustConfig] = None,
+                     interpret=None):
     """stacked_params: pytree with leading device axis K; weights: (K,).
 
     Returns the weighted average with the leading axis contracted.
+    `robust` selects a robust reducer (repro.kernels.robust_avg) run on
+    the flattened (K, N) payload with the RAW weights — one Pallas call
+    for the whole tree, matching the mesh hot path column-for-column.
     """
+    if robust is not None:
+        from repro.kernels.robust_avg import ops as robust_ops
+
+        flat, leaves, treedef = _flatten_stacked(stacked_params)
+        if not leaves:
+            return stacked_params
+        avg_flat = robust_ops.robust_average(
+            flat, weights.astype(jnp.float32), robust, interpret=interpret)
+        return _unflatten_row(avg_flat, leaves, treedef)
+
     w = _normalized(weights)
 
     if impl == "pallas":
@@ -51,7 +102,8 @@ def weighted_average(stacked_params, weights, *, impl: str = "jnp"):
 
 
 def weighted_average_psum(local_params, local_weight, *, axis_names,
-                          impl: str = "jnp", interpret=None):
+                          impl: str = "jnp", robust: Optional[RobustConfig] = None,
+                          interpret=None):
     """shard_map path: every mesh slice holds ITS device's parameters;
     Algorithm 2 is a weighted reduction over the device axes.
 
@@ -70,8 +122,13 @@ def weighted_average_psum(local_params, local_weight, *, axis_names,
         round instead of a tree of jnp means. `interpret=None` lets the
         kernel wrapper pick interpret mode on CPU, so the same code path
         runs everywhere (tests force it through interpret on host).
+
+    A non-None `robust` routes the SAME flat-gather path through the
+    selected robust reducer with the RAW gathered weights (0 = dropped
+    worker contributes nothing) — still exactly one payload all-gather
+    + one Pallas kernel call per round.
     """
-    if impl == "pallas":
+    if impl == "pallas" or robust is not None:
         from repro.kernels.wavg import ops as wavg_ops
 
         leaves, treedef = jax.tree_util.tree_flatten(local_params)
@@ -82,9 +139,15 @@ def weighted_average_psum(local_params, local_weight, *, axis_names,
         stacked = jax.lax.all_gather(flat, axis_names)       # (K, N)
         w_full = jax.lax.all_gather(
             local_weight.astype(jnp.float32), axis_names)    # (K,)
-        w_norm = _normalized(w_full)
-        avg_flat = wavg_ops.weighted_average(stacked, w_norm,
-                                             interpret=interpret)
+        if robust is not None:
+            from repro.kernels.robust_avg import ops as robust_ops
+
+            avg_flat = robust_ops.robust_average(stacked, w_full, robust,
+                                                 interpret=interpret)
+        else:
+            w_norm = _normalized(w_full)
+            avg_flat = wavg_ops.weighted_average(stacked, w_norm,
+                                                 interpret=interpret)
         out, off = [], 0
         for x in leaves:
             out.append(avg_flat[off:off + x.size].reshape(x.shape)

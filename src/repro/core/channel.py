@@ -80,12 +80,16 @@ class ChannelSimulator:
                      gen_params: int, disc_step_flops: float,
                      gen_step_flops: float, n_d: int, n_g: int,
                      fedgan: bool = False,
-                     uplink_bits: float | None = None) -> RoundTiming:
+                     uplink_bits: float | None = None,
+                     compute_mult: np.ndarray | None = None) -> RoundTiming:
         """Wall-clock pieces of one communication round.
 
         uplink_bits: total per-device upload payload in bits (e.g.
         `quantize.tree_bits` at the protocol's quantization width);
         None falls back to `bits_per_param` x the uploaded param count.
+        compute_mult: optional (K,) per-device local-compute multiplier
+        (core/faults.py — stragglers > 1, free-riders replaying stale
+        uploads spend 0 compute).
         """
         cfg = self.cfg
         rates = self.uplink_rates(int(mask.sum()))
@@ -95,6 +99,8 @@ class ChannelSimulator:
         upload = np.where(mask, up_bits / np.maximum(rates, 1.0), 0.0)
         dev_flops = n_d * disc_step_flops + (n_g * gen_step_flops if fedgan else 0.0)
         compute_dev = np.where(mask, dev_flops / cfg.device_flops, 0.0)
+        if compute_mult is not None:
+            compute_dev = compute_dev * np.asarray(compute_mult, np.float64)
         compute_srv = 0.0 if fedgan else n_g * gen_step_flops / cfg.server_flops
         down_bits = cfg.bits_per_param * (disc_params + gen_params)
         broadcast = down_bits / self.downlink_rate()

@@ -85,10 +85,13 @@ import numpy as np
 
 from repro.configs.base import ProtocolConfig
 from repro.core import protocol, fedgan, shard_round
+from repro.core import faults as faults_lib
 from repro.core.channel import ChannelConfig, ChannelSimulator, round_wallclock
+from repro.core.faults import FaultConfig
 from repro.core.jax_channel import JaxChannel
 from repro.core.jax_scheduling import JaxScheduler
 from repro.core.scheduling import SchedulerState, schedule_round
+from repro.kernels.robust_avg import ROBUST_METHODS, RobustConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,11 +101,13 @@ class _Algorithm:
     (when mesh-capable) its shard_map single-round / fused-scan
     entries."""
     make_state: Callable          # (key, init_fn, pcfg, n_devices) -> state
-    round_fn: Callable            # (spec, pcfg) -> (s, d, w, k) -> (s, m)
+    round_fn: Callable  # (spec, pcfg, faults, reducer) -> (s,d,w,k) -> (s, m)
     rounds_scan: Optional[Callable] = None   # unified stacked engine entry
     mesh_round: Optional[Callable] = None    # (spec, pcfg, mesh,
     #                                  device_axes=, tp_axis=, tp=)
     mesh_rounds_scan: Optional[Callable] = None  # fused mesh engine entry
+    payload: Optional[Callable] = None  # state -> uplink payload tree (the
+    #                                  free-rider stale-cache initializer)
     fedgan: bool = False
     pooled: bool = False          # centralized: pools the data shards
 
@@ -118,23 +123,27 @@ class _Algorithm:
 _ALGORITHMS = {
     "proposed": _Algorithm(
         make_state=protocol.make_train_state,
-        round_fn=lambda spec, pcfg: (
-            lambda s, d, w, k: protocol.gan_round(spec, pcfg, s, d, w, k)),
+        round_fn=lambda spec, pcfg, faults, reducer: (
+            lambda s, d, w, k: protocol.gan_round(
+                spec, pcfg, s, d, w, k, faults=faults, reducer=reducer)),
         rounds_scan=protocol.gan_rounds_scan,
         mesh_round=shard_round.shard_map_round,
-        mesh_rounds_scan=shard_round.shard_rounds_scan),
+        mesh_rounds_scan=shard_round.shard_rounds_scan,
+        payload=shard_round.PROPOSED_PAYLOAD),
     "fedgan": _Algorithm(
         make_state=fedgan.make_fedgan_state,
-        round_fn=lambda spec, pcfg: (
-            lambda s, d, w, k: fedgan.fedgan_round(spec, pcfg, s, d, w, k)),
+        round_fn=lambda spec, pcfg, faults, reducer: (
+            lambda s, d, w, k: fedgan.fedgan_round(
+                spec, pcfg, s, d, w, k, faults=faults, reducer=reducer)),
         rounds_scan=fedgan.fedgan_rounds_scan,
         mesh_round=shard_round.fedgan_shard_map_round,
         mesh_rounds_scan=shard_round.fedgan_shard_rounds_scan,
+        payload=shard_round.FEDGAN_PAYLOAD,
         fedgan=True),
     "centralized": _Algorithm(
         make_state=lambda key, init_fn, pcfg, n: protocol.make_train_state(
             key, init_fn, pcfg, 1),
-        round_fn=lambda spec, pcfg: (
+        round_fn=lambda spec, pcfg, faults, reducer: (
             lambda s, d, w, k: protocol.centralized_step(spec, pcfg, s, d, k)),
         pooled=True),
 }
@@ -181,7 +190,10 @@ class Trainer:
                  channel_cfg: Optional[ChannelConfig] = None,
                  disc_step_flops: float = 1e9, gen_step_flops: float = 1e9,
                  driver: str = "auto", layout: str = "stacked",
-                 mesh=None, device_axes=("data",), tp: int = 1):
+                 mesh=None, device_axes=("data",), tp: int = 1,
+                 faults: Optional[FaultConfig] = None, reducer=None,
+                 partition: Optional[str] = None, labels=None,
+                 partition_alpha: float = 0.5, partition_seed: int = 0):
         if algorithm not in _ALGORITHMS:
             raise ValueError(f"unknown algorithm {algorithm!r} "
                              f"(have {tuple(_ALGORITHMS)})")
@@ -228,6 +240,47 @@ class Trainer:
         if driver == "auto":
             driver = "fused" if algo.fused else "host"
 
+        # Hostile-worker regime (core/faults.py + kernels/robust_avg):
+        # `reducer` accepts a method name ("mean" = plain weighted
+        # average), or a full RobustConfig for non-default parameters.
+        if isinstance(reducer, str):
+            reducer = None if reducer == "mean" else RobustConfig(
+                method=reducer)
+        if reducer is not None and not isinstance(reducer, RobustConfig):
+            raise ValueError(
+                f"reducer must be 'mean', one of {ROBUST_METHODS}, or a "
+                f"RobustConfig (got {reducer!r})")
+        if algo.payload is None and (faults is not None
+                                     or reducer is not None):
+            raise ValueError(
+                f"faults/reducer are not supported for algorithm "
+                f"{algorithm!r} (no device uploads to corrupt or "
+                f"robustly aggregate)")
+        if faults is not None and faults.n_devices != pcfg.n_devices:
+            raise ValueError(
+                f"faults.n_devices={faults.n_devices} must match "
+                f"pcfg.n_devices={pcfg.n_devices}")
+        if tp > 1 and (faults is not None or reducer is not None):
+            raise NotImplementedError(
+                "faults/robust reducers are not supported under tensor "
+                "parallelism (tp > 1); run tp=1")
+        self.faults, self.reducer = faults, reducer
+        self._fault_prog = faults_lib.fault_program(faults)
+
+        # Dormant-data wiring: partition a FLAT dataset into per-device
+        # shards (data/partition.py) so non-IID splits compose with
+        # faults. `partition=None` keeps the pre-sharded contract.
+        if partition is not None:
+            if not hasattr(data_stacked, "shape"):
+                raise ValueError(
+                    "partition=... expects a single flat data array "
+                    "(N, ...); pre-shard pytree datasets yourself")
+            from repro.data.partition import partition as partition_fn
+            data_stacked = jnp.asarray(partition_fn(
+                np.asarray(data_stacked), pcfg.n_devices, labels=labels,
+                kind=partition, alpha=partition_alpha,
+                seed=partition_seed))
+
         self.spec, self.pcfg = spec, pcfg
         self.algorithm, self._algo = algorithm, algo
         self.driver, self.layout = driver, layout
@@ -244,6 +297,11 @@ class Trainer:
         self.gen_step_flops = gen_step_flops
 
         self.state = algo.make_state(key, init_fn, pcfg, self.n_devices)
+        # Free-rider stale-upload cache: part of the state tree, so it
+        # rides the scan carry / mesh replication / checkpoints like any
+        # other state entry (resume under faults is exact).
+        self.state = faults_lib.attach_fault_state(self.state, faults,
+                                                   algo.payload)
         if algo.pooled:
             self._pooled = jax.tree.map(
                 lambda x: x.reshape((-1,) + x.shape[2:]), data_stacked)
@@ -264,9 +322,11 @@ class Trainer:
             self.mesh = mesh
             self._round = algo.mesh_round(spec, pcfg, mesh,
                                           device_axes=device_axes,
-                                          tp_axis=self.tp_axis, tp=tp)
+                                          tp_axis=self.tp_axis, tp=tp,
+                                          faults=faults, robust=reducer)
         else:
-            self._round = jax.jit(algo.round_fn(spec, pcfg))
+            self._round = jax.jit(algo.round_fn(spec, pcfg, faults,
+                                                reducer))
 
         if self.driver == "fused":
             self.jax_channel = JaxChannel(channel_cfg)
@@ -329,7 +389,8 @@ class Trainer:
                 gen_step_flops=self.gen_step_flops,
                 uplink_bits=self._uplink_bits,
                 eval_fn=eval_fn, eval_every=eval_every,
-                tp_axis=self.tp_axis, tp=self.tp)
+                tp_axis=self.tp_axis, tp=self.tp,
+                faults=self.faults, robust=self.reducer)
         else:
             scan = self._algo.rounds_scan
 
@@ -345,7 +406,8 @@ class Trainer:
                     disc_step_flops=self.disc_step_flops,
                     gen_step_flops=self.gen_step_flops,
                     uplink_bits=self._uplink_bits,
-                    eval_fn=eval_fn, eval_every=eval_every)
+                    eval_fn=eval_fn, eval_every=eval_every,
+                    faults=self.faults, reducer=self.reducer)
 
             fn = jax.jit(run_chunk, donate_argnums=(0, 1))
         self._chunk_fns[cache_key] = (fid_fn if eval_every else None, fn)
@@ -428,10 +490,18 @@ class Trainer:
                   fid_fn: Optional[Callable], verbose: bool):
         for _ in range(n_rounds):
             t = self._round_index
+            round_key = jax.random.fold_in(self.key, t)
 
-            # Step 1: schedule + channel state
+            # Step 1: schedule + channel state. Fault dropout knocks
+            # scheduled devices out BEFORE timing, realized from the
+            # SAME round key as the fused drivers so masks stay bitwise
+            # identical across every engine (core/faults.py).
             rates = self.channel.uplink_rates(self.sched.n_scheduled)
             mask = schedule_round(self.sched, rates, self.rng)
+            compute_mult = None
+            if self._fault_prog is not None:
+                mask = mask & ~self._fault_prog.dropout_mask_np(round_key)
+                compute_mult = self._fault_prog.compute_mult_np
             timing = self.channel.round_timing(
                 mask=mask, disc_params=self._disc_nparams,
                 gen_params=self._gen_nparams,
@@ -439,14 +509,14 @@ class Trainer:
                 gen_step_flops=self.gen_step_flops,
                 n_d=self.pcfg.n_d, n_g=self.pcfg.n_g,
                 fedgan=self._algo.fedgan,
-                uplink_bits=self._uplink_bits)
+                uplink_bits=self._uplink_bits,
+                compute_mult=compute_mult)
             active = mask & ~timing.stragglers
             weights = jnp.asarray(
                 np.where(active, float(self.pcfg.sample_size), 0.0),
                 dtype=jnp.float32)
 
             # Steps 2-5 (jitted)
-            round_key = jax.random.fold_in(self.key, t)
             data = self._pooled if self._algo.pooled else self.data
             self.state, metrics = self._round(self.state, data, weights,
                                               round_key)

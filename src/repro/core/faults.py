@@ -1,0 +1,246 @@
+"""Hostile-worker fault injection — the paper's actual deployment regime.
+
+The paper motivates the protocol with unreliable, heterogeneous,
+possibly adversarial edge devices; this module makes worker failure a
+first-class, fused-scan-compatible axis of the round engine. A
+`FaultConfig` describes a worker population, a `FaultProgram` realizes
+it:
+
+  * STATIC ROLES — which workers are free-riders / byzantine and each
+    worker's compute slowdown are drawn ONCE, host-side, from
+    `numpy.default_rng(cfg.seed)` (the population doesn't change
+    between rounds — a compromised device stays compromised). The
+    role arrays are plain constants inside every jitted engine.
+  * PER-ROUND REALIZATIONS — dropout masks and byzantine noise are
+    keyed from the SAME per-round `round_key` machinery as
+    `protocol.schedule_and_time` (fresh salts `_SALT_DROP` /
+    `_SALT_BYZ`), so identical fault masks realize BITWISE on the host
+    oracle, the stacked fused scan, and the mesh `shard_rounds_scan`.
+    There is no evolving fault RNG carry: every draw is a pure
+    function of (cfg, round_key), which is what makes checkpoint
+    resume under faults exact.
+
+Fault axes:
+
+  dropout_prob     — per-round iid worker dropout (partial
+                     participation beyond the scheduler's choice): the
+                     device answered the schedule but never uploads.
+                     Applied to the scheduling mask BEFORE channel
+                     timing, so upload timing and wallclock see the
+                     true participating set.
+  straggler_factor — heterogeneous compute: worker k's local step time
+                     is multiplied by slowdown_k ~ U[1, factor] (drawn
+                     once), fed into `channel.round_timing` via
+                     `compute_mult` so slow workers really do straggle
+                     past the deadline and stretch the wallclock.
+  n_free_riders    — workers that do NO local training and upload a
+                     STALE copy of the global model instead (the
+                     free-rider attack against MD-GAN-style servers):
+                     the replayed payload is the round-START global
+                     parameters cached in `state["fault"]["stale"]`,
+                     i.e. what the worker last received. The cache
+                     rides inside the training state, so it is donated
+                     through the fused scans, replicated by the mesh
+                     state specs, and serialized by checkpoints
+                     (resume under faults is exact). Free-riders spend
+                     no compute (compute_mult 0) — they answer
+                     instantly and never straggle on compute.
+  n_byzantine      — workers that upload scaled Gaussian noise
+                     (`byz_scale` x N(0, 1), one flat draw over the
+                     payload sliced per leaf — the same draw-order
+                     trick as `quantize.quantize_tree`, so stacked
+                     vmap and mesh per-slice execution corrupt
+                     bitwise-identically).
+
+Free-rider and byzantine roles are disjoint (drawn from one
+permutation). Counter the corruption with the robust reducers in
+`kernels/robust_avg` via `engine.Trainer(reducer=...)`.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# PRNG salts for the per-round fault streams, disjoint from the
+# protocol (_SALT_SHARED_Z/_SALT_DATA), channel (_SALT_RATES/_SALT_SCHED/
+# _SALT_TIMING), and quantizer (_SALT_QUANT) salts.
+_SALT_DROP = 0xD120FF
+_SALT_BYZ = 0xB42A27
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Hostile-worker population description (hashable: it is part of
+    the mesh builder memo keys and the engine's chunk-fn cache keys)."""
+    n_devices: int
+    dropout_prob: float = 0.0
+    n_free_riders: int = 0
+    n_byzantine: int = 0
+    byz_scale: float = 10.0
+    straggler_factor: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if not 0.0 <= self.dropout_prob < 1.0:
+            raise ValueError(
+                f"dropout_prob must be in [0, 1) (got {self.dropout_prob})")
+        if self.n_free_riders < 0 or self.n_byzantine < 0:
+            raise ValueError("n_free_riders/n_byzantine must be >= 0")
+        if self.n_free_riders + self.n_byzantine > self.n_devices:
+            raise ValueError(
+                f"{self.n_free_riders} free-riders + {self.n_byzantine} "
+                f"byzantine workers exceed n_devices={self.n_devices}")
+        if self.straggler_factor < 1.0:
+            raise ValueError(
+                f"straggler_factor must be >= 1 (got "
+                f"{self.straggler_factor}) — it multiplies compute time")
+
+    @property
+    def corrupts_uploads(self) -> bool:
+        return self.n_free_riders > 0 or self.n_byzantine > 0
+
+
+class FaultProgram:
+    """Realized fault program: static role arrays + per-round keyed
+    draws. Build through `fault_program(cfg)` (memoized — the arrays
+    are baked as constants into jitted round functions)."""
+
+    def __init__(self, cfg: FaultConfig):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        perm = rng.permutation(cfg.n_devices)
+        free_rider = np.zeros(cfg.n_devices, bool)
+        free_rider[perm[:cfg.n_free_riders]] = True
+        byzantine = np.zeros(cfg.n_devices, bool)
+        byzantine[perm[cfg.n_free_riders:
+                       cfg.n_free_riders + cfg.n_byzantine]] = True
+        slowdown = rng.uniform(1.0, cfg.straggler_factor,
+                               cfg.n_devices) if cfg.straggler_factor > 1.0 \
+            else np.ones(cfg.n_devices)
+        # free-riders train nothing: zero local compute time
+        compute_mult = np.where(free_rider, 0.0, slowdown)
+
+        self.free_rider_np = free_rider
+        self.byzantine_np = byzantine
+        self.compute_mult_np = compute_mult.astype(np.float64)
+        # the first fault_program() call may happen INSIDE a trace (the
+        # launch-path builders construct lazily); force the role arrays
+        # to concrete constants or the memoized program would leak
+        # tracers into later traces
+        with jax.ensure_compile_time_eval():
+            self.free_rider = jnp.asarray(free_rider)
+            self.byzantine = jnp.asarray(byzantine)
+            self.compute_mult = jnp.asarray(compute_mult, jnp.float32)
+
+    @property
+    def corrupts(self) -> bool:
+        return self.cfg.corrupts_uploads
+
+    # ------------------------------------------------------------------
+    # per-round realizations — pure functions of round_key
+    # ------------------------------------------------------------------
+    def dropout_mask(self, round_key):
+        """(K,) bool — True where the worker DROPS this round. Keyed by
+        `fold_in(round_key, _SALT_DROP)`; the ONE definition every
+        engine (host numpy loop included, via np.asarray of this) uses,
+        so dropout is bitwise-identical across layouts and drivers."""
+        if self.cfg.dropout_prob <= 0.0:
+            return jnp.zeros(self.cfg.n_devices, bool)
+        u = jax.random.uniform(jax.random.fold_in(round_key, _SALT_DROP),
+                               (self.cfg.n_devices,))
+        return u < self.cfg.dropout_prob
+
+    def dropout_mask_np(self, round_key) -> np.ndarray:
+        """Host-oracle twin: the SAME jax draw, materialized to numpy."""
+        return np.asarray(self.dropout_mask(round_key))
+
+
+def byz_key(round_key, dev_index):
+    """Key for device `dev_index`'s byzantine noise this round — one
+    definition shared by the stacked vmap and the mesh slice paths
+    (mirrors `quantize.device_uplink_key`)."""
+    return jax.random.fold_in(jax.random.fold_in(round_key, _SALT_BYZ),
+                              dev_index)
+
+
+def byzantine_noise(key, payload, scale: float):
+    """Scaled-Gaussian forged payload with the payload's structure.
+
+    ONE flat normal draw over the whole payload sliced per leaf (the
+    `quantize.quantize_tree` draw-order trick): the realized noise is
+    independent of how the tree is traversed, so every execution layout
+    forges bitwise-identical uploads."""
+    leaves, treedef = jax.tree_util.tree_flatten(payload)
+    sizes = [int(x.size) for x in leaves]
+    flat = jax.random.normal(key, (sum(sizes),)) * scale
+    out, off = [], 0
+    for x, size in zip(leaves, sizes):
+        out.append(flat[off:off + size].reshape(x.shape).astype(x.dtype))
+        off += size
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def corrupt_upload(prog: FaultProgram, round_key, dev_index, payload,
+                   stale=None):
+    """Device `dev_index`'s ACTUAL upload under the fault program:
+    the honest `payload`, the `stale` cached global (free-rider), or
+    scaled noise (byzantine). Pure jnp.where selection so `dev_index`
+    may be traced (mesh slice) or vmapped (stacked layout) — identical
+    math either way."""
+    cfg = prog.cfg
+    out = payload
+    if cfg.n_free_riders > 0 and stale is not None:
+        is_fr = prog.free_rider[dev_index]
+        out = jax.tree.map(lambda p, s: jnp.where(is_fr, s, p), out, stale)
+    if cfg.n_byzantine > 0:
+        is_byz = prog.byzantine[dev_index]
+        noise = byzantine_noise(byz_key(round_key, dev_index), payload,
+                                cfg.byz_scale)
+        out = jax.tree.map(lambda p, n: jnp.where(is_byz, n, p), out, noise)
+    return out
+
+
+def corrupt_uploads_stacked(prog: FaultProgram, round_key, payload_stacked,
+                            stale=None):
+    """Stacked-layout twin of `corrupt_upload`: apply the fault program
+    to a payload pytree with leading device axis K. `stale` is the
+    UNSTACKED cached global payload (same copy for every free-rider)."""
+    n_devices = prog.cfg.n_devices
+    fn = lambda i, p: corrupt_upload(prog, round_key, i, p, stale)
+    return jax.vmap(fn, in_axes=(0, 0))(jnp.arange(n_devices),
+                                        payload_stacked)
+
+
+def attach_fault_state(state, faults: FaultConfig | None, payload_fn):
+    """Seed the stale-upload cache into a fresh training state when the
+    fault program has free-riders: `state["fault"]["stale"]` holds the
+    round-start global payload (`payload_fn(state)`, e.g.
+    `shard_round.PROPOSED_PAYLOAD`). The entry is a regular state key:
+    non-stacked, so `rules.shard_round_state_specs` replicates it on
+    the mesh, the fused scans carry it, and checkpoints serialize it —
+    resume under faults reproduces the replayed uploads exactly."""
+    if faults is None or faults.n_free_riders == 0 or payload_fn is None:
+        return state
+    state = dict(state)
+    # jnp.array COPIES: the cache must not alias the live parameter
+    # buffers, or the fused drivers' donation sees one buffer twice.
+    state["fault"] = {"stale": jax.tree.map(jnp.array, payload_fn(state))}
+    return state
+
+
+# FaultConfig -> FaultProgram memo: programs hold device arrays that
+# jitted round functions close over as constants; rebuilding per trace
+# would defeat the builder/chunk caches' reuse.
+_PROGRAMS: dict = {}
+
+
+def fault_program(cfg: FaultConfig | None) -> FaultProgram | None:
+    if cfg is None:
+        return None
+    prog = _PROGRAMS.get(cfg)
+    if prog is None:
+        prog = _PROGRAMS[cfg] = FaultProgram(cfg)
+    return prog

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ProtocolConfig
+from repro.core import faults as faults_lib
 from repro.core import losses, quantize
 from repro.core.averaging import weighted_average, broadcast_like
 from repro.core.protocol import (GanModelSpec, rounds_scan,
@@ -75,9 +76,15 @@ def fedgan_device_update(spec: GanModelSpec, pcfg: ProtocolConfig,
 
 
 def fedgan_round(spec: GanModelSpec, pcfg: ProtocolConfig, state,
-                 data_stacked, weights, round_key):
+                 data_stacked, weights, round_key, *, faults=None,
+                 reducer=None):
     """One FedGAN communication round: local joint updates, average BOTH
-    generators and discriminators (server does model averaging only)."""
+    generators and discriminators (server does model averaging only).
+    `faults`/`reducer` mirror `protocol.gan_round`: corruption hits the
+    COMBINED {"gen", "disc"} payload after the quantized uplink, and the
+    robust reducer aggregates that combined tree in ONE reduction
+    (matching the mesh layout's single-payload hot path) before the two
+    nets are split back out."""
     n_devices = weights.shape[0]
     gen_stacked = broadcast_like(state["gen"], n_devices)
     disc_stacked = broadcast_like(state["disc"], n_devices)
@@ -97,12 +104,24 @@ def fedgan_round(spec: GanModelSpec, pcfg: ProtocolConfig, state,
     payload = quantize.roundtrip_stacked(
         round_key, {"gen": new_gens, "disc": new_discs},
         pcfg.quantize_bits)
-    new_gens, new_discs = payload["gen"], payload["disc"]
 
-    gen_avg = weighted_average(new_gens, weights)
-    disc_avg = weighted_average(new_discs, weights)
+    prog = faults_lib.fault_program(faults)
+    if prog is not None and prog.corrupts:
+        stale = state["fault"]["stale"] if "fault" in state else None
+        payload = faults_lib.corrupt_uploads_stacked(
+            prog, round_key, payload, stale=stale)
+
+    if reducer is not None:
+        avg = weighted_average(payload, weights, robust=reducer)
+        gen_avg, disc_avg = avg["gen"], avg["disc"]
+    else:
+        gen_avg = weighted_average(payload["gen"], weights)
+        disc_avg = weighted_average(payload["disc"], weights)
     new_state = {"gen": gen_avg, "disc": disc_avg,
                  "gen_opt": new_gen_opt, "disc_opt": new_disc_opt}
+    if "fault" in state:
+        new_state["fault"] = {"stale": {"gen": state["gen"],
+                                        "disc": state["disc"]}}
     return new_state, {"participation": (weights > 0).astype(jnp.float32).mean()}
 
 
@@ -113,19 +132,21 @@ def fedgan_rounds_scan(spec: GanModelSpec, pcfg: ProtocolConfig, state,
                        gen_step_flops: float = 1e9,
                        uplink_bits: Optional[int] = None,
                        eval_fn: Optional[Callable] = None,
-                       eval_every: int = 0):
+                       eval_every: int = 0, faults=None, reducer=None):
     """R fused FedGAN rounds (see `protocol.rounds_scan`): the baseline
     gets the same one-dispatch-per-chunk engine as the proposed
     protocol, with `fedgan=True` selecting the two-net upload payload
     and the Fig. 5 wallclock composition."""
-    round_fn = lambda st, d, w, k: fedgan_round(spec, pcfg, st, d, w, k)
+    round_fn = lambda st, d, w, k: fedgan_round(spec, pcfg, st, d, w, k,
+                                                faults=faults,
+                                                reducer=reducer)
     return rounds_scan(round_fn, pcfg, state, data_stacked, key, n_rounds,
                        channel=channel, scheduler=scheduler,
                        sched_carry=sched_carry, start_round=start_round,
                        disc_step_flops=disc_step_flops,
                        gen_step_flops=gen_step_flops, fedgan=True,
                        uplink_bits=uplink_bits, eval_fn=eval_fn,
-                       eval_every=eval_every)
+                       eval_every=eval_every, faults=faults)
 
 
 def make_fedgan_state(key, init_fn, pcfg: ProtocolConfig, n_devices: int):

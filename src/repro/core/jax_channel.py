@@ -66,11 +66,13 @@ class JaxChannel:
     def round_timing(self, key, mask, *, disc_params: int, gen_params: int,
                      disc_step_flops: float, gen_step_flops: float,
                      n_d: int, n_g: int, fedgan: bool = False,
-                     uplink_bits: float | None = None) -> JaxRoundTiming:
+                     uplink_bits: float | None = None,
+                     compute_mult=None) -> JaxRoundTiming:
         """Wall-clock pieces of one communication round (fresh fading
         draw, mirroring the numpy twin's second `uplink_rates` call).
         `uplink_bits` overrides the per-device upload payload exactly as
-        in the numpy twin."""
+        in the numpy twin; `compute_mult` is the optional (K,)
+        per-device local-compute multiplier (core/faults.py)."""
         cfg = self.cfg
         rates = self.uplink_rates(key, jnp.sum(mask))
         up_bits = uplink_bits if uplink_bits is not None else (
@@ -80,6 +82,8 @@ class JaxChannel:
         dev_flops = n_d * disc_step_flops + (
             n_g * gen_step_flops if fedgan else 0.0)
         compute_dev = jnp.where(mask, dev_flops / cfg.device_flops, 0.0)
+        if compute_mult is not None:
+            compute_dev = compute_dev * jnp.asarray(compute_mult, jnp.float32)
         compute_srv = jnp.float32(
             0.0 if fedgan else n_g * gen_step_flops / cfg.server_flops)
         down_bits = cfg.bits_per_param * (disc_params + gen_params)

@@ -47,6 +47,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ProtocolConfig
+from repro.core import faults as faults_lib
 from repro.core import jax_channel, jax_scheduling, losses, quantize
 from repro.core.averaging import weighted_average, broadcast_like
 from repro.optim import make_optimizer, apply_updates
@@ -253,15 +254,22 @@ def server_update(spec: GanModelSpec, pcfg: ProtocolConfig, gen_params,
 # ---------------------------------------------------------------------------
 
 def gan_round(spec: GanModelSpec, pcfg: ProtocolConfig, state, data_stacked,
-              weights, round_key, *, constrain_stacked=None):
+              weights, round_key, *, constrain_stacked=None, faults=None,
+              reducer=None):
     """One full round.
 
     state: {"gen", "disc", "gen_opt", "disc_opt"} — disc/disc_opt are the
            GLOBAL discriminator (post-broadcast) and the per-device local
-           optimizer states (stacked K).
+           optimizer states (stacked K). An optional "fault" entry holds
+           the free-rider stale-upload cache (core/faults.py).
     data_stacked: pytree, leading axes (K, n_k, ...) — device-private shards.
     weights: (K,) — m_k for scheduled devices, 0 otherwise (Step 1 output;
            also encodes straggler exclusion, footnote 1).
+    faults:  optional FaultConfig — free-riders replay the stale cache and
+           byzantine workers upload scaled noise, keyed by `round_key` so
+           every execution layout realizes identical corruption.
+    reducer: optional RobustConfig — Step 4 aggregates with the selected
+           robust reducer instead of the plain weighted mean.
     Returns (new_state, metrics).
     """
     n_devices = weights.shape[0]
@@ -291,8 +299,18 @@ def gan_round(spec: GanModelSpec, pcfg: ProtocolConfig, state, data_stacked,
     new_discs = quantize.roundtrip_stacked(round_key, new_discs,
                                            pcfg.quantize_bits)
 
-    # Steps 3–4 — Algorithm 2: weighted averaging (the uplink collective).
-    disc_avg = weighted_average(new_discs, weights)
+    # Hostile uploads (core/faults.py): free-riders replay the stale
+    # cache, byzantine devices upload scaled noise — applied AFTER the
+    # quantized uplink, exactly where the server receives payloads.
+    prog = faults_lib.fault_program(faults)
+    if prog is not None and prog.corrupts:
+        stale = state["fault"]["stale"] if "fault" in state else None
+        new_discs = faults_lib.corrupt_uploads_stacked(
+            prog, round_key, new_discs, stale=stale)
+
+    # Steps 3–4 — Algorithm 2: weighted averaging (the uplink collective),
+    # optionally through a robust reducer (kernels/robust_avg).
+    disc_avg = weighted_average(new_discs, weights, robust=reducer)
 
     # Algorithm 3 — serial: against fresh phi^{t+1}; parallel: against the
     # round-start phi^t, dataflow-independent of the averaging collective.
@@ -309,6 +327,11 @@ def gan_round(spec: GanModelSpec, pcfg: ProtocolConfig, state, data_stacked,
     }
     new_state = {"gen": new_gen, "disc": disc_avg,
                  "gen_opt": new_gen_opt, "disc_opt": new_disc_opt}
+    if "fault" in state:
+        # advance the one-round-stale free-rider cache to this round's
+        # broadcast payload (what a free-rider would have received and
+        # can replay next round without computing)
+        new_state["fault"] = {"stale": state["disc"]}
     return new_state, metrics
 
 
@@ -332,12 +355,17 @@ def count_params(tree) -> int:
 def schedule_and_time(pcfg: ProtocolConfig, channel, scheduler, sched_carry,
                       round_key, *, disc_nparams: int, gen_nparams: int,
                       disc_step_flops: float, gen_step_flops: float,
-                      fedgan: bool, uplink_bits):
+                      fedgan: bool, uplink_bits, faults=None):
     """Step 1 + channel accounting for one round, shared by EVERY
     execution layout of the fused engine (stacked `rounds_scan` and the
     mesh `shard_round.shard_rounds_scan`): the per-round rates/scheduler/
     timing keys are derived from `round_key` with fixed salts, so both
     layouts see bitwise-identical masks, stragglers, and weights.
+
+    With a FaultConfig, per-round dropout (keyed off the SAME round_key,
+    core/faults.py) knocks scheduled devices out of the mask before
+    timing, and the program's per-device compute multipliers (stragglers
+    slower, free-riders free) feed the wallclock model.
 
     Returns (mask, new_sched_carry, timing, weights).
     """
@@ -350,10 +378,16 @@ def schedule_and_time(pcfg: ProtocolConfig, channel, scheduler, sched_carry,
     rates = channel.uplink_rates(k_rates, scheduler.n_scheduled)
     mask, sched_carry = jax_scheduling.schedule_step(scheduler, sched_carry,
                                                      rates, k_sched)
+    prog = faults_lib.fault_program(faults)
+    compute_mult = None
+    if prog is not None:
+        mask = mask & ~prog.dropout_mask(round_key)
+        compute_mult = prog.compute_mult
     timing = channel.round_timing(
         k_timing, mask, disc_params=disc_nparams, gen_params=gen_nparams,
         disc_step_flops=disc_step_flops, gen_step_flops=gen_step_flops,
-        n_d=pcfg.n_d, n_g=pcfg.n_g, fedgan=fedgan, uplink_bits=uplink_bits)
+        n_d=pcfg.n_d, n_g=pcfg.n_g, fedgan=fedgan, uplink_bits=uplink_bits,
+        compute_mult=compute_mult)
     active = mask & ~timing.stragglers
     weights = jnp.where(active, float(pcfg.sample_size),
                         0.0).astype(jnp.float32)
@@ -376,7 +410,8 @@ def rounds_scan(round_fn, pcfg: ProtocolConfig, state, data_stacked, key,
                 start_round=0, disc_step_flops: float = 1e9,
                 gen_step_flops: float = 1e9, fedgan: bool = False,
                 uplink_bits: Optional[int] = None,
-                eval_fn: Optional[Callable] = None, eval_every: int = 0):
+                eval_fn: Optional[Callable] = None, eval_every: int = 0,
+                faults=None):
     """The UNIFIED fused round engine: R communication rounds of ANY
     round function in one `lax.scan`.
 
@@ -419,7 +454,7 @@ def rounds_scan(round_fn, pcfg: ProtocolConfig, state, data_stacked, key,
             pcfg, channel, scheduler, sc, round_key,
             disc_nparams=disc_nparams, gen_nparams=gen_nparams,
             disc_step_flops=disc_step_flops, gen_step_flops=gen_step_flops,
-            fedgan=fedgan, uplink_bits=uplink_bits)
+            fedgan=fedgan, uplink_bits=uplink_bits, faults=faults)
 
         # Steps 2-5
         st, metrics = round_fn(st, data_stacked, weights, round_key)
@@ -455,16 +490,17 @@ def gan_rounds_scan(spec: GanModelSpec, pcfg: ProtocolConfig, state,
                     gen_step_flops: float = 1e9,
                     uplink_bits: Optional[int] = None,
                     eval_fn: Optional[Callable] = None,
-                    eval_every: int = 0):
+                    eval_every: int = 0, faults=None, reducer=None):
     """R fused rounds of the PROPOSED protocol (see `rounds_scan`)."""
-    round_fn = lambda st, d, w, k: gan_round(spec, pcfg, st, d, w, k)
+    round_fn = lambda st, d, w, k: gan_round(spec, pcfg, st, d, w, k,
+                                             faults=faults, reducer=reducer)
     return rounds_scan(round_fn, pcfg, state, data_stacked, key, n_rounds,
                        channel=channel, scheduler=scheduler,
                        sched_carry=sched_carry, start_round=start_round,
                        disc_step_flops=disc_step_flops,
                        gen_step_flops=gen_step_flops, fedgan=False,
                        uplink_bits=uplink_bits, eval_fn=eval_fn,
-                       eval_every=eval_every)
+                       eval_every=eval_every, faults=faults)
 
 
 def centralized_step(spec: GanModelSpec, pcfg: ProtocolConfig, state, data,

@@ -93,6 +93,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ProtocolConfig
+from repro.core import faults as faults_lib
 from repro.core import fedgan as fedgan_mod
 from repro.core import jax_channel, quantize
 from repro.core.protocol import (GanModelSpec, count_params, device_update,
@@ -204,6 +205,7 @@ def _quantize_uplink(tp_ctx: Optional[TpCtx], key, payload, bits: int):
 # ---------------------------------------------------------------------------
 
 def _proposed_slice_round(spec: GanModelSpec, pcfg: ProtocolConfig, axis,
+                          faults, robust,
                           avg_impl: str, tp_ctx: Optional[TpCtx], my_index,
                           st, data_k, w_k, weights, weight_sum, round_key):
     """The proposed protocol's Steps 2-5 as seen by ONE mesh slice.
@@ -211,6 +213,11 @@ def _proposed_slice_round(spec: GanModelSpec, pcfg: ProtocolConfig, axis,
     st: per-slice state {"gen", "disc", "gen_opt", "disc_opt"} (already
     unstacked; under TP every model-parallel leaf is this rank's
     shard — the spec's apply functions own the in-slice collectives).
+    An optional replicated "fault" entry carries the free-rider stale
+    cache (core/faults.py); `faults` corrupts THIS slice's upload keyed
+    by (round_key, my_index) — bitwise what the stacked layout's
+    vmapped lane realizes — and `robust` selects the robust reducer in
+    the Algorithm-2 reduction.
     Returns (new_st, metrics).
     """
     disc_k, disc_opt_k, disc_obj = device_update(
@@ -226,12 +233,19 @@ def _proposed_slice_round(spec: GanModelSpec, pcfg: ProtocolConfig, axis,
             tp_ctx, quantize.device_uplink_key(round_key, my_index),
             disc_k, pcfg.quantize_bits)
 
+    prog = faults_lib.fault_program(faults)
+    if prog is not None and prog.corrupts:
+        stale = st["fault"]["stale"] if "fault" in st else None
+        disc_k = faults_lib.corrupt_upload(prog, round_key, my_index,
+                                           disc_k, stale=stale)
+
     # Algorithm 2 over the DEVICE axes only — Pallas wavg kernel on the
     # flat all-gathered payload by default (one collective + one
-    # kernel), per-leaf psum with impl="jnp". Under TP each rank
+    # kernel), per-leaf psum with impl="jnp"; `robust` routes the SAME
+    # flat-gather path through a robust reducer. Under TP each rank
     # reduces just its shard: the gathered payload is 1/tp the model.
     disc_avg = weighted_average_psum(disc_k, w_k, axis_names=axis,
-                                     impl=avg_impl)
+                                     impl=avg_impl, robust=robust)
 
     disc_for_gen = disc_avg if pcfg.schedule == "serial" else st["disc"]
     gen, gen_opt, gen_obj = server_update(spec, pcfg, st["gen"],
@@ -247,10 +261,13 @@ def _proposed_slice_round(spec: GanModelSpec, pcfg: ProtocolConfig, axis,
     }
     new_st = {"gen": gen, "disc": disc_avg, "gen_opt": gen_opt,
               "disc_opt": disc_opt_k}
+    if "fault" in st:
+        new_st["fault"] = {"stale": st["disc"]}
     return new_st, metrics
 
 
 def _fedgan_slice_round(spec: GanModelSpec, pcfg: ProtocolConfig, axis,
+                        faults, robust,
                         avg_impl: str, tp_ctx: Optional[TpCtx], my_index,
                         st, data_k, w_k, weights, weight_sum, round_key):
     """One FedGAN round as seen by ONE mesh slice: n_d local (disc, gen)
@@ -278,10 +295,19 @@ def _fedgan_slice_round(spec: GanModelSpec, pcfg: ProtocolConfig, axis,
             tp_ctx, quantize.device_uplink_key(round_key, my_index),
             payload, pcfg.quantize_bits)
 
+    prog = faults_lib.fault_program(faults)
+    if prog is not None and prog.corrupts:
+        stale = st["fault"]["stale"] if "fault" in st else None
+        payload = faults_lib.corrupt_upload(prog, round_key, my_index,
+                                            payload, stale=stale)
+
     avg = weighted_average_psum(payload, w_k, axis_names=axis,
-                                impl=avg_impl)
+                                impl=avg_impl, robust=robust)
     new_st = {"gen": avg["gen"], "disc": avg["disc"],
               "gen_opt": gen_opt_k, "disc_opt": disc_opt_k}
+    if "fault" in st:
+        new_st["fault"] = {"stale": {"gen": st["gen"],
+                                     "disc": st["disc"]}}
     metrics = {"participation": (weights > 0).astype(jnp.float32).mean()}
     return new_st, metrics
 
@@ -384,15 +410,32 @@ def _channel_key(channel):
     return tuple(dataclasses.astuple(channel.cfg))
 
 
+def _check_faults_tp(faults, robust, tp_axis, tp: int):
+    """Fault injection / robust reduction compose with the mesh layout
+    at tp=1 only: under TP the per-slice payload is a model-axis shard,
+    so byzantine noise keying, the stale cache, and shard-local norms/
+    distances would all diverge from the worker-global semantics."""
+    if tp_axis is not None and tp > 1 and (faults is not None
+                                           or robust is not None):
+        raise NotImplementedError(
+            "faults/robust reducers are not supported under tensor "
+            "parallelism (tp > 1); run tp=1")
+
+
 def shard_map_round(spec: GanModelSpec, pcfg: ProtocolConfig, mesh,
                     device_axes=("data",), avg_impl: str = "pallas",
-                    tp_axis=None, tp: int = 1):
-    """Single proposed-protocol round per dispatch (the mesh oracle)."""
+                    tp_axis=None, tp: int = 1, faults=None, robust=None):
+    """Single proposed-protocol round per dispatch (the mesh oracle).
+    With `faults`, the host drives scheduling/dropout and this dispatch
+    realizes the matching upload corruption; `robust` selects the
+    Algorithm-2 robust reducer."""
+    _check_faults_tp(faults, robust, tp_axis, tp)
     return _memo_builder(
         ("proposed_round", spec, pcfg, mesh, tuple(device_axes), avg_impl,
-         tp_axis, tp),
+         tp_axis, tp, faults, robust),
         lambda: _mesh_single_round(
-            partial(_proposed_slice_round, spec, pcfg, device_axes),
+            partial(_proposed_slice_round, spec, pcfg, device_axes,
+                    faults, robust),
             PROPOSED_STACKED_KEYS, PROPOSED_METRICS, PROPOSED_PAYLOAD,
             mesh, device_axes, avg_impl, tp_axis, tp))
 
@@ -400,15 +443,18 @@ def shard_map_round(spec: GanModelSpec, pcfg: ProtocolConfig, mesh,
 def fedgan_shard_map_round(spec: GanModelSpec, pcfg: ProtocolConfig, mesh,
                            device_axes=("data",),
                            avg_impl: str = "pallas",
-                           tp_axis=None, tp: int = 1):
+                           tp_axis=None, tp: int = 1, faults=None,
+                           robust=None):
     """Single FedGAN round per dispatch (the mesh FedGAN oracle).
     Expects gen_opt AND disc_opt stacked (every device trains both
     nets)."""
+    _check_faults_tp(faults, robust, tp_axis, tp)
     return _memo_builder(
         ("fedgan_round", spec, pcfg, mesh, tuple(device_axes), avg_impl,
-         tp_axis, tp),
+         tp_axis, tp, faults, robust),
         lambda: _mesh_single_round(
-            partial(_fedgan_slice_round, spec, pcfg, device_axes),
+            partial(_fedgan_slice_round, spec, pcfg, device_axes,
+                    faults, robust),
             FEDGAN_STACKED_KEYS, FEDGAN_METRICS, FEDGAN_PAYLOAD,
             mesh, device_axes, avg_impl, tp_axis, tp))
 
@@ -423,7 +469,8 @@ def _mesh_rounds_scan(slice_round_fn: Callable, stacked_keys, metric_names,
                       disc_step_flops: float, gen_step_flops: float,
                       uplink_bits: Optional[int], avg_impl: str,
                       fedgan: bool, eval_fn: Optional[Callable],
-                      eval_every: int, tp_axis=None, tp: int = 1):
+                      eval_every: int, tp_axis=None, tp: int = 1,
+                      faults=None):
     """The unified fused round engine on the MESH layout, parametrized
     by the algorithm's per-slice round body.
 
@@ -500,7 +547,7 @@ def _mesh_rounds_scan(slice_round_fn: Callable, stacked_keys, metric_names,
                     gen_nparams=gen_nparams,
                     disc_step_flops=disc_step_flops,
                     gen_step_flops=gen_step_flops, fedgan=fedgan,
-                    uplink_bits=bits)
+                    uplink_bits=bits, faults=faults)
                 w_k = weights[my_index]
 
                 new_st, metrics = slice_round_fn(
@@ -558,10 +605,12 @@ def _mesh_rounds_scan(slice_round_fn: Callable, stacked_keys, metric_names,
 
 def _scan_memo_key(kind, spec, pcfg, mesh, n_rounds, channel, scheduler,
                    device_axes, disc_step_flops, gen_step_flops,
-                   uplink_bits, avg_impl, tp_axis, tp):
+                   uplink_bits, avg_impl, tp_axis, tp, faults=None,
+                   robust=None):
     return (kind, spec, pcfg, mesh, n_rounds, _channel_key(channel),
             scheduler, tuple(device_axes), disc_step_flops,
-            gen_step_flops, uplink_bits, avg_impl, tp_axis, tp)
+            gen_step_flops, uplink_bits, avg_impl, tp_axis, tp, faults,
+            robust)
 
 
 def shard_rounds_scan(spec: GanModelSpec, pcfg: ProtocolConfig, mesh,
@@ -571,25 +620,29 @@ def shard_rounds_scan(spec: GanModelSpec, pcfg: ProtocolConfig, mesh,
                       uplink_bits: Optional[int] = None,
                       avg_impl: str = "pallas",
                       eval_fn: Optional[Callable] = None,
-                      eval_every: int = 0, tp_axis=None, tp: int = 1):
+                      eval_every: int = 0, tp_axis=None, tp: int = 1,
+                      faults=None, robust=None):
     """R fused rounds of the PROPOSED protocol on the mesh layout
     (see `_mesh_rounds_scan`), keyed bitwise-identically to
-    `protocol.gan_rounds_scan`."""
+    `protocol.gan_rounds_scan` — including the fault realization
+    (dropout masks, corruption draws) under a FaultConfig."""
+    _check_faults_tp(faults, robust, tp_axis, tp)
     build = lambda: _mesh_rounds_scan(
-        partial(_proposed_slice_round, spec, pcfg, device_axes),
+        partial(_proposed_slice_round, spec, pcfg, device_axes,
+                faults, robust),
         PROPOSED_STACKED_KEYS, PROPOSED_METRICS, PROPOSED_PAYLOAD, pcfg,
         mesh, n_rounds, channel=channel, scheduler=scheduler,
         device_axes=device_axes, disc_step_flops=disc_step_flops,
         gen_step_flops=gen_step_flops, uplink_bits=uplink_bits,
         avg_impl=avg_impl, fedgan=False, eval_fn=eval_fn,
-        eval_every=eval_every, tp_axis=tp_axis, tp=tp)
+        eval_every=eval_every, tp_axis=tp_axis, tp=tp, faults=faults)
     if eval_fn is not None:
         return build()   # per-run closures; never memoized
     return _memo_builder(
         _scan_memo_key("proposed_scan", spec, pcfg, mesh, n_rounds,
                        channel, scheduler, device_axes, disc_step_flops,
                        gen_step_flops, uplink_bits, avg_impl, tp_axis,
-                       tp),
+                       tp, faults, robust),
         build)
 
 
@@ -602,26 +655,28 @@ def fedgan_shard_rounds_scan(spec: GanModelSpec, pcfg: ProtocolConfig, mesh,
                              avg_impl: str = "pallas",
                              eval_fn: Optional[Callable] = None,
                              eval_every: int = 0, tp_axis=None,
-                             tp: int = 1):
+                             tp: int = 1, faults=None, robust=None):
     """R fused FEDGAN rounds on the mesh layout: per-device joint D+G
     local iterations, the single two-net quantized uplink payload,
     Algorithm-2-style averaging of BOTH networks, and the FedGAN
     wall-clock composition — one donated shard_map `lax.scan` dispatch,
     keyed bitwise-identically to `fedgan.fedgan_rounds_scan` so the
     host oracle pins it."""
+    _check_faults_tp(faults, robust, tp_axis, tp)
     build = lambda: _mesh_rounds_scan(
-        partial(_fedgan_slice_round, spec, pcfg, device_axes),
+        partial(_fedgan_slice_round, spec, pcfg, device_axes,
+                faults, robust),
         FEDGAN_STACKED_KEYS, FEDGAN_METRICS, FEDGAN_PAYLOAD, pcfg, mesh,
         n_rounds, channel=channel, scheduler=scheduler,
         device_axes=device_axes, disc_step_flops=disc_step_flops,
         gen_step_flops=gen_step_flops, uplink_bits=uplink_bits,
         avg_impl=avg_impl, fedgan=True, eval_fn=eval_fn,
-        eval_every=eval_every, tp_axis=tp_axis, tp=tp)
+        eval_every=eval_every, tp_axis=tp_axis, tp=tp, faults=faults)
     if eval_fn is not None:
         return build()
     return _memo_builder(
         _scan_memo_key("fedgan_scan", spec, pcfg, mesh, n_rounds,
                        channel, scheduler, device_axes, disc_step_flops,
                        gen_step_flops, uplink_bits, avg_impl, tp_axis,
-                       tp),
+                       tp, faults, robust),
         build)

@@ -1,0 +1,4 @@
+from repro.kernels.robust_avg import ops, ref
+from repro.kernels.robust_avg.ops import ROBUST_METHODS, RobustConfig
+
+__all__ = ["ops", "ref", "ROBUST_METHODS", "RobustConfig"]

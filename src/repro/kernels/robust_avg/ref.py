@@ -1,0 +1,118 @@
+"""Numpy oracles for the robust reducers — the canonical semantics the
+kernel/ops paths are property-tested against (tests/
+test_robust_avg_property.py).
+
+All three take the all-gathered payload matrix x (K, N) and RAW
+participation-aware weights w (K,) (0 = dropped worker) and return the
+robust weighted aggregate (N,) in float.
+
+Tie-breaking and clamping rules are part of the contract (free-riders
+replaying identical stale payloads produce EXACT value ties):
+
+  trimmed_mean — per coordinate, remove `trim` (max, min) pairs from
+      the participants, each time knocking out the FIRST (lowest
+      worker index) occurrence of the extreme value; pair i is removed
+      only while n_participants >= 2 i + 3; renormalize the surviving
+      weights per coordinate.
+  norm_clip — scale row k by min(1, clip_factor * median participant
+      norm / ||x_k||); average the scaled rows with the ORIGINAL
+      weights (sum w_k s_k x_k / sum w_k) — the DP-FedAvg-style
+      clipped mean, so oversized uploads shrink toward zero instead of
+      being re-inflated.
+  krum — multi-Krum: score_k = sum of the q = clamp(n_part - f - 2,
+      1, K-1) smallest squared distances to OTHER participants;
+      select the m = max(n_part - f, 1) lowest-scoring participants
+      (ties by lowest index) — or an explicit m override — and take
+      their plain weighted mean.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def trimmed_mean_ref(x, w, *, trim: int):
+    x = np.asarray(x, np.float32)
+    w = np.asarray(w, np.float32)
+    k, n = x.shape
+    part = w > 0.0
+    inc = np.broadcast_to(part[:, None], x.shape).copy()
+    ridx = np.broadcast_to(np.arange(k, dtype=np.int64)[:, None], x.shape)
+    n_part = int(part.sum())
+
+    for i in range(trim):
+        if n_part < 2 * i + 3:
+            break
+        big = np.where(inc, x, -np.inf)
+        mx = big.max(axis=0, keepdims=True)
+        is_mx = inc & (big == mx)
+        first = np.where(is_mx, ridx, k).min(axis=0, keepdims=True)
+        rem_max = is_mx & (ridx == first)
+        inc_mid = inc & ~rem_max
+        small = np.where(inc_mid, x, np.inf)
+        mn = small.min(axis=0, keepdims=True)
+        is_mn = inc_mid & (small == mn)
+        first = np.where(is_mn, ridx, k).min(axis=0, keepdims=True)
+        rem_min = is_mn & (ridx == first)
+        inc = inc & ~(rem_max | rem_min)
+
+    wk = np.where(inc, w[:, None], 0.0).astype(np.float64)
+    num = (wk * x.astype(np.float64)).sum(axis=0)
+    den = wk.sum(axis=0)
+    return num / np.maximum(den, 1e-12)
+
+
+def norm_clip_ref(x, w, *, clip_factor: float):
+    x = np.asarray(x, np.float64)
+    w = np.asarray(w, np.float64)
+    part = w > 0.0
+    norms = np.sqrt((x * x).sum(axis=1))
+    med = np.median(norms[part]) if part.any() else 0.0
+    tau = clip_factor * med
+    scale = np.minimum(1.0, tau / np.maximum(norms, 1e-12))
+    w_eff = np.where(part, w * scale, 0.0)
+    return (w_eff[:, None] * x).sum(axis=0) / np.maximum(w.sum(), 1e-12)
+
+
+def krum_selection_ref(x, w, *, f: int, m=None):
+    """(K,) bool — the multi-Krum selected set (shared with ops twin
+    tests so selection, not just the final mean, is pinned)."""
+    x = np.asarray(x, np.float64)
+    w = np.asarray(w, np.float64)
+    k = x.shape[0]
+    part = w > 0.0
+    n_part = int(part.sum())
+    if n_part == 0:
+        return np.zeros(k, bool)
+    sq = (x * x).sum(axis=1)
+    d2 = np.maximum(sq[:, None] + sq[None, :] - 2.0 * (x @ x.T), 0.0)
+    invalid = ~part[:, None] | ~part[None, :] | np.eye(k, dtype=bool)
+    d2 = np.where(invalid, np.inf, d2)
+    q = int(np.clip(n_part - f - 2, 1, k - 1))
+    ds = np.sort(d2, axis=1)[:, :q]
+    score = np.where(np.isfinite(ds), ds, 0.0).sum(axis=1)
+    score = np.where(part, score, np.inf)
+    m_sel = max(n_part - f, 1) if m is None else int(m)
+    m_sel = int(np.clip(m_sel, 1, n_part))
+    order = np.lexsort((np.arange(k), score))
+    sel = np.zeros(k, bool)
+    sel[order[:m_sel]] = True
+    return sel & part
+
+
+def krum_ref(x, w, *, f: int, m=None):
+    x = np.asarray(x, np.float64)
+    w = np.asarray(w, np.float64)
+    sel = krum_selection_ref(x, w, f=f, m=m)
+    w_eff = np.where(sel, w, 0.0)
+    return (w_eff[:, None] * x).sum(axis=0) / np.maximum(w_eff.sum(), 1e-12)
+
+
+def robust_ref(x, w, cfg):
+    """Dispatch on a `RobustConfig` (repro.kernels.robust_avg.ops)."""
+    if cfg.method == "trimmed_mean":
+        return trimmed_mean_ref(x, w, trim=cfg.trim)
+    if cfg.method == "norm_clip":
+        return norm_clip_ref(x, w, clip_factor=cfg.clip_factor)
+    if cfg.method == "krum":
+        return krum_ref(x, w, f=cfg.krum_f, m=cfg.krum_m)
+    raise ValueError(cfg.method)

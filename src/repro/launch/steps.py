@@ -77,9 +77,18 @@ def build_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
                      fuse_rounds: int = 1,
                      layout: str = "stacked",
                      algorithm: str = "proposed",
-                     tp: Optional[int] = None):
+                     tp: Optional[int] = None,
+                     faults=None, reducer=None):
     """The protocol round as the pod-scale train step, on either
     execution layout.
+
+    `faults` (core.faults.FaultConfig) injects the hostile-worker
+    regime — per-round dropout, stragglers, free-riders, byzantine
+    uploads — and `reducer` (a robust method name or
+    kernels.robust_avg.RobustConfig) swaps Algorithm 2 for a robust
+    aggregate. Both are layout='mesh' features (the fused mesh engine
+    owns scheduling + the averaging collective); requesting them on the
+    stacked builder raises.
 
     The paper's K devices = the mesh's device axes (pod x data slices).
     global_batch rows of real data are the per-round union of local
@@ -146,9 +155,15 @@ def build_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
     enc = needs_enc(cfg)
     if layout == "mesh":
         return _build_mesh_train_step(cfg, shape, mesh, plan, pcfg,
-                                      fuse_rounds, algorithm, tp)
+                                      fuse_rounds, algorithm, tp,
+                                      faults=faults, reducer=reducer)
     if layout != "stacked":
         raise ValueError(f"unknown layout {layout!r}")
+    if faults is not None or reducer is not None:
+        raise ValueError(
+            "faults/reducer require layout='mesh' (the fused mesh engine "
+            "owns scheduling and the averaging collective); the stacked "
+            "pod-scale step has no fault machinery")
     if tp not in (None, 1):
         raise ValueError(
             f"tp={tp} applies to layout='mesh' only; on the stacked "
@@ -235,16 +250,20 @@ def build_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
 def _build_mesh_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh, plan,
                            pcfg: ProtocolConfig, fuse_rounds: int,
                            algorithm: str = "proposed",
-                           tp: Optional[int] = None):
+                           tp: Optional[int] = None,
+                           faults=None, reducer=None):
     """layout="mesh" of `build_train_step`: `fuse_rounds` complete rounds
     per dispatch inside shard_map, state + scheduler carry donated.
     algorithm selects the per-slice round body (proposed | fedgan);
     tp > 1 (default: the mesh's `model` axis size) runs each worker
-    slice as a Megatron TP group over that axis."""
+    slice as a Megatron TP group over that axis. `faults`/`reducer`
+    thread the hostile-worker regime into the fused scan (tp=1 only)."""
+    from repro.core import faults as faults_lib
     from repro.core.channel import ChannelConfig
     from repro.core.engine import mesh_algorithm
     from repro.core.jax_channel import JaxChannel
     from repro.core.jax_scheduling import JaxScheduler
+    from repro.kernels.robust_avg import RobustConfig
 
     if needs_enc(cfg):
         raise NotImplementedError(
@@ -271,18 +290,27 @@ def _build_mesh_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh, plan,
     # model axis instead.
     spec = make_backbone_spec(cfg, seq, dtype=COMPUTE_DTYPE,
                               tp_axis=tp_axis)
+    if isinstance(reducer, str):
+        reducer = None if reducer == "mean" else RobustConfig(method=reducer)
+    if faults is not None and faults.n_devices != k_dev:
+        raise ValueError(
+            f"faults.n_devices={faults.n_devices} must match the mesh's "
+            f"device-axes size {k_dev}")
     channel = JaxChannel(ChannelConfig(n_devices=k_dev))
     scheduler = JaxScheduler(policy=pcfg.scheduler, n_devices=k_dev,
                              ratio=pcfg.scheduling_ratio)
     step = rounds_scan(spec, pcfg, mesh, max(1, fuse_rounds),
                        channel=channel, scheduler=scheduler,
-                       device_axes=plan.dev_axes, tp_axis=tp_axis, tp=tp)
+                       device_axes=plan.dev_axes, tp_axis=tp_axis, tp=tp,
+                       faults=faults, robust=reducer)
 
     def init_fn(key):
         return gan_model.gan_init(key, cfg)
 
     state_abs = _bf16_floats(jax.eval_shape(
-        lambda: make_state(jax.random.PRNGKey(0), init_fn, pcfg, k_dev)))
+        lambda: faults_lib.attach_fault_state(
+            make_state(jax.random.PRNGKey(0), init_fn, pcfg, k_dev),
+            faults, algo.payload)))
     carry_abs = jax.eval_shape(scheduler.init_carry)
     tokens_abs = jax.ShapeDtypeStruct((k_dev, n_k, seq), jnp.int32)
     key_abs = jax.eval_shape(lambda: jax.random.PRNGKey(0))

@@ -154,6 +154,37 @@ def main():
     ap.add_argument("--quantize-bits", type=int, default=16,
                     help="uplink quantization width (paper: 16; >=32 "
                          "disables quantization)")
+    ap.add_argument("--reducer", default="mean",
+                    choices=["mean", "trimmed_mean", "norm_clip", "krum"],
+                    help="server aggregation rule (layout mesh only): "
+                         "mean = plain weighted average; the robust "
+                         "reducers tolerate corrupted uploads at the "
+                         "same one-gather + one-Pallas-kernel cost")
+    ap.add_argument("--trim", type=int, default=1,
+                    help="--reducer trimmed_mean: extreme pairs removed "
+                         "per coordinate")
+    ap.add_argument("--clip-factor", type=float, default=2.0,
+                    help="--reducer norm_clip: clip uploads to this "
+                         "multiple of the median participant norm")
+    ap.add_argument("--krum-f", type=int, default=1,
+                    help="--reducer krum: assumed byzantine count f")
+    ap.add_argument("--dropout", type=float, default=0.0,
+                    help="fault injection: per-round iid worker dropout "
+                         "probability (layout mesh only)")
+    ap.add_argument("--free-riders", type=int, default=0,
+                    help="fault injection: workers replaying the stale "
+                         "round-start global model instead of training")
+    ap.add_argument("--byzantine", type=int, default=0,
+                    help="fault injection: workers uploading scaled "
+                         "Gaussian noise")
+    ap.add_argument("--byz-scale", type=float, default=10.0,
+                    help="byzantine noise scale (x N(0,1))")
+    ap.add_argument("--straggler-factor", type=float, default=1.0,
+                    help="fault injection: per-worker compute slowdown "
+                         "~ U[1, factor] fed into the wallclock model")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for the static fault roles (who is a "
+                         "free-rider/byzantine/straggler)")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0,
                     help="checkpoint every N rounds (0 = final only); "
@@ -181,6 +212,29 @@ def main():
                  "layout's model axis is --tp (refusing to silently "
                  "reinterpret the mesh shape)")
 
+    from repro.core.faults import FaultConfig
+    faults = None
+    if (args.dropout > 0.0 or args.free_riders > 0 or args.byzantine > 0
+            or args.straggler_factor > 1.0):
+        faults = FaultConfig(
+            n_devices=args.data_dim, dropout_prob=args.dropout,
+            n_free_riders=args.free_riders, n_byzantine=args.byzantine,
+            byz_scale=args.byz_scale,
+            straggler_factor=args.straggler_factor, seed=args.fault_seed)
+    reducer = None
+    if args.reducer != "mean":
+        from repro.kernels.robust_avg import RobustConfig
+        reducer = RobustConfig(method=args.reducer, trim=args.trim,
+                               clip_factor=args.clip_factor,
+                               krum_f=args.krum_f)
+    if (faults is not None or reducer is not None) \
+            and args.layout != "mesh":
+        ap.error("fault injection / robust reducers run on the fused "
+                 "mesh engine: use --layout mesh")
+    if (faults is not None or reducer is not None) and args.tp > 1:
+        ap.error("faults/robust reducers are not supported under tensor "
+                 "parallelism yet; use --tp 1")
+
     if args.distributed:
         jax.distributed.initialize()
 
@@ -206,7 +260,8 @@ def main():
                 fuse_rounds=length, layout=args.layout,
                 algorithm=args.algorithm,
                 tp=args.tp if args.layout == "mesh" else None,
-                pcfg_overrides={"quantize_bits": args.quantize_bits})
+                pcfg_overrides={"quantize_bits": args.quantize_bits},
+                faults=faults, reducer=reducer)
         return step_cache[length]
 
     _, abstract_args = get_step(min(fuse, args.rounds) or 1)
@@ -278,10 +333,14 @@ def main():
         # — per-algorithm state init comes from the ONE strategy
         # registry (both CLI algorithms are mesh-capable, so the
         # accessor covers the stacked layout's proposed-only case too)
-        make_state = mesh_algorithm(args.algorithm).make_state
-        state = make_state(
+        algo = mesh_algorithm(args.algorithm)
+        state = algo.make_state(
             jax.random.PRNGKey(0), lambda k: gan_model.gan_init(k, cfg),
             pcfg, k_dev)
+        # free-rider fault programs carry a stale-upload cache inside the
+        # state (and inside checkpoints) — seed it to match state_abs
+        from repro.core.faults import attach_fault_state
+        state = attach_fault_state(state, faults, algo.payload)
         state = jax.tree.map(
             lambda x, a: jnp.asarray(x, a.dtype), state, state_abs)
 

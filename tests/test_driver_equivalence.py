@@ -205,6 +205,40 @@ class TestTrainerCheckpointResume:
         for rb, rc in zip(tb.history, tc.history[3:]):
             assert rb.cumulative_s == rc.cumulative_s
 
+    def test_fused_resume_carries_fault_state(self, tmp_path):
+        """Checkpoint round-trip under a fault program: the stale-upload
+        cache (`state["fault"]`) must survive the trip so a resumed run
+        reproduces the free-rider replays, masks, and wallclock exactly
+        (the fault matrix itself lives in test_faults_equivalence.py)."""
+        from repro.core.faults import FaultConfig
+        faults = FaultConfig(n_devices=K, dropout_prob=0.3,
+                             n_free_riders=1, straggler_factor=2.0)
+        pcfg = ProtocolConfig(n_devices=K, n_d=1, n_g=1, sample_size=4,
+                              server_sample_size=4, lr_d=1e-3, lr_g=1e-3,
+                              scheduler="round_robin",
+                              scheduling_ratio=0.5)
+        chan = ChannelConfig(n_devices=K, seed=3, fading=False)
+
+        def make():
+            return Trainer(SPEC, pcfg, lambda k: dcgan.gan_init(k, CFG),
+                           DATA, KEY, channel_cfg=chan, driver="fused",
+                           faults=faults)
+
+        ta = make()
+        ta.run(3)
+        ta.save_checkpoint(str(tmp_path))
+        tb = make()
+        assert tb.restore(str(tmp_path)) == 3
+        assert "fault" in tb.state
+        tb.run(3)
+        tc = make()
+        tc.run(6)
+        for a, b in zip(jax.tree_util.tree_leaves(tb.state),
+                        jax.tree_util.tree_leaves(tc.state)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert tb._clock == tc._clock
+        assert_histories_match(tc.history[3:], tb.history, wallclock=True)
+
     def test_restore_resumes_scheduler_carry(self, tmp_path):
         """round_robin cursor must survive the round-trip (a fresh carry
         would restart the rotation and change the masks)."""

@@ -1,0 +1,332 @@
+"""Fault-injection determinism matrix: the hostile-worker layer
+(core/faults.py) must realize IDENTICAL fault programs on every engine.
+
+Contract (see core/faults.py docstring):
+  * dropout masks and byzantine/free-rider roles are pure functions of
+    (FaultConfig, round_key) — the SAME round-key machinery as
+    `protocol.schedule_and_time` — so the host oracle, the stacked
+    fused scan, and the mesh `shard_rounds_scan` draw BITWISE-identical
+    fault realizations (satellite mirror of test_driver_equivalence);
+  * with faults on, params still agree across drivers to float32
+    round-off and wallclock to rtol 1e-5 with fading off (stragglers
+    and free-rider zero-compute flow through the SAME channel model);
+  * with zero faults, a FaultConfig-carrying trainer reproduces the
+    no-faults trajectory exactly (the fault layer is a no-op, not a
+    perturbation);
+  * checkpoint resume under faults continues the stale-upload cache,
+    masks, and wallclock exactly (satellite: the fault state rides in
+    checkpoints).
+
+The 8-device mesh matrix is `slow`/`robust`-marked and runs in CI's
+robust lane; the K=4 host-vs-stacked-fused checks stay in the fast lane.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ProtocolConfig
+from repro.configs.dcgan import DCGANConfig
+from repro.core import Trainer
+from repro.core.channel import ChannelConfig
+from repro.core.faults import FaultConfig, FaultProgram, fault_program
+from repro.kernels.robust_avg import RobustConfig
+from repro.models import dcgan
+from repro.models.specs import make_dcgan_spec
+
+KEY = jax.random.PRNGKey(0)
+CFG = DCGANConfig(nz=8, ngf=8, ndf=8, nc=1, image_size=8)
+SPEC = make_dcgan_spec(CFG)
+K = 4
+DATA = jax.random.normal(jax.random.PRNGKey(9), (K, 8, 8, 8, 1))
+
+FULL_FAULTS = FaultConfig(n_devices=K, dropout_prob=0.3, n_free_riders=1,
+                          n_byzantine=1, straggler_factor=2.0, seed=1)
+
+
+def make_trainer(driver, *, faults=None, reducer=None,
+                 algorithm="proposed", schedule="serial", bits=16):
+    pcfg = ProtocolConfig(n_devices=K, n_d=1, n_g=1, sample_size=4,
+                          server_sample_size=4, lr_d=1e-3, lr_g=1e-3,
+                          schedule=schedule, scheduler="round_robin",
+                          scheduling_ratio=0.5, quantize_bits=bits)
+    chan = ChannelConfig(n_devices=K, seed=3, fading=False)
+    return Trainer(SPEC, pcfg, lambda k: dcgan.gan_init(k, CFG), DATA, KEY,
+                   channel_cfg=chan, driver=driver, algorithm=algorithm,
+                   faults=faults, reducer=reducer)
+
+
+def assert_trees_close(a, b, atol=2e-5):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32), atol=atol)
+
+
+def assert_run_pair_matches(th, tf, rounds=5):
+    h, f = th.run(rounds), tf.run(rounds)
+    for rh, rf in zip(h, f):
+        np.testing.assert_array_equal(rh.mask, rf.mask)       # bitwise
+        np.testing.assert_allclose(rh.wallclock_s, rf.wallclock_s,
+                                   rtol=1e-5)
+    assert_trees_close(th.state, tf.state)
+    return h, f
+
+
+class TestFaultProgramDeterminism:
+    """The program itself, independent of any engine."""
+
+    def test_roles_reproduce_and_are_disjoint(self):
+        cfg = FaultConfig(n_devices=8, n_free_riders=2, n_byzantine=3,
+                          straggler_factor=4.0, seed=7)
+        a, b = FaultProgram(cfg), FaultProgram(cfg)
+        np.testing.assert_array_equal(a.free_rider_np, b.free_rider_np)
+        np.testing.assert_array_equal(a.byzantine_np, b.byzantine_np)
+        np.testing.assert_array_equal(a.compute_mult_np, b.compute_mult_np)
+        assert not (a.free_rider_np & a.byzantine_np).any()
+        assert a.free_rider_np.sum() == 2 and a.byzantine_np.sum() == 3
+        # free-riders spend no compute; stragglers in [1, factor]
+        assert (a.compute_mult_np[a.free_rider_np] == 0.0).all()
+        honest = ~a.free_rider_np
+        assert (a.compute_mult_np[honest] >= 1.0).all()
+        assert (a.compute_mult_np[honest] <= 4.0).all()
+
+    def test_different_seed_different_roles(self):
+        kw = dict(n_devices=8, n_free_riders=2, n_byzantine=2)
+        a = FaultProgram(FaultConfig(seed=0, **kw))
+        b = FaultProgram(FaultConfig(seed=1, **kw))
+        assert (a.free_rider_np != b.free_rider_np).any() or \
+            (a.byzantine_np != b.byzantine_np).any()
+
+    def test_dropout_mask_pure_in_round_key(self):
+        prog = fault_program(FaultConfig(n_devices=6, dropout_prob=0.5))
+        rk = jax.random.fold_in(KEY, 3)
+        np.testing.assert_array_equal(prog.dropout_mask_np(rk),
+                                      prog.dropout_mask_np(rk))
+        # distinct rounds realize distinct masks (w.h.p. at p=0.5, K=6,
+        # over 8 rounds)
+        masks = [prog.dropout_mask_np(jax.random.fold_in(KEY, t))
+                 for t in range(8)]
+        assert any((masks[0] != m).any() for m in masks[1:])
+
+    def test_dropout_mask_jnp_np_twins_bitwise(self):
+        prog = fault_program(FaultConfig(n_devices=6, dropout_prob=0.4))
+        for t in range(5):
+            rk = jax.random.fold_in(KEY, t)
+            np.testing.assert_array_equal(
+                np.asarray(prog.dropout_mask(rk)), prog.dropout_mask_np(rk))
+
+    def test_config_validation(self):
+        with pytest.raises(ValueError, match="dropout_prob"):
+            FaultConfig(n_devices=4, dropout_prob=1.0)
+        with pytest.raises(ValueError, match="exceed"):
+            FaultConfig(n_devices=4, n_free_riders=3, n_byzantine=2)
+        with pytest.raises(ValueError, match="straggler"):
+            FaultConfig(n_devices=4, straggler_factor=0.5)
+
+
+class TestHostVsFusedUnderFaults:
+    """K=4 fast lane: host oracle vs stacked fused under the full fault
+    program — masks bitwise, wallclock rtol 1e-5, params atol 2e-5."""
+
+    @pytest.mark.parametrize("algorithm", ["proposed", "fedgan"])
+    def test_full_fault_program_matches(self, algorithm):
+        th = make_trainer("host", faults=FULL_FAULTS, algorithm=algorithm)
+        tf = make_trainer("fused", faults=FULL_FAULTS, algorithm=algorithm)
+        h, _ = assert_run_pair_matches(th, tf)
+        # dropout actually drops someone beyond the scheduler's choice
+        # at p=0.3 over 5 rounds of 2 scheduled (w.h.p.)
+        assert any(r.mask.sum() < 2 for r in h)
+
+    @pytest.mark.parametrize("reducer", ["trimmed_mean", "norm_clip",
+                                         "krum"])
+    def test_faults_with_robust_reducer_matches(self, reducer):
+        rc = RobustConfig(method=reducer, trim=1, krum_f=1)
+        th = make_trainer("host", faults=FULL_FAULTS, reducer=rc)
+        tf = make_trainer("fused", faults=FULL_FAULTS, reducer=rc)
+        assert_run_pair_matches(th, tf)
+
+    def test_zero_fault_config_is_identity(self):
+        """A FaultConfig with every axis off must reproduce the
+        no-faults trajectory bitwise (same jitted math, no-op layer)."""
+        t0 = make_trainer("fused")
+        t1 = make_trainer("fused", faults=FaultConfig(n_devices=K))
+        h0, h1 = t0.run(4), t1.run(4)
+        for r0, r1 in zip(h0, h1):
+            np.testing.assert_array_equal(r0.mask, r1.mask)
+            assert r0.wallclock_s == r1.wallclock_s
+        for a, b in zip(jax.tree_util.tree_leaves(t0.state),
+                        jax.tree_util.tree_leaves(t1.state)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_straggler_factor_stretches_wallclock(self):
+        """compute_mult really reaches channel timing: a 10x straggler
+        fleet must be slower than the honest fleet on both drivers."""
+        slow_cfg = FaultConfig(n_devices=K, straggler_factor=10.0, seed=2)
+        for driver in ("host", "fused"):
+            fast = make_trainer(driver)
+            slow = make_trainer(driver, faults=slow_cfg)
+            wf = sum(r.wallclock_s for r in fast.run(3))
+            ws = sum(r.wallclock_s for r in slow.run(3))
+            assert ws > wf
+
+    def test_free_riders_degrade_plain_mean(self):
+        """The attack does damage: 2-of-4 free-riders under the plain
+        mean must change the trajectory vs the honest run (otherwise
+        the robustness matrix is testing a no-op)."""
+        honest = make_trainer("fused")
+        attacked = make_trainer(
+            "fused", faults=FaultConfig(n_devices=K, n_free_riders=2))
+        honest.run(3), attacked.run(3)
+        la = jax.tree_util.tree_leaves(honest.state["disc"])
+        lb = jax.tree_util.tree_leaves(attacked.state["disc"])
+        assert any(float(jnp.abs(a - b).max()) > 1e-6
+                   for a, b in zip(la, lb))
+
+
+class TestCheckpointResumeUnderFaults:
+    """Satellite: the stale-upload cache rides in checkpoints, so a
+    resumed run under faults reproduces masks, wallclock, AND the
+    replayed free-rider uploads exactly."""
+
+    @pytest.mark.parametrize("algorithm", ["proposed", "fedgan"])
+    def test_fused_resume_under_faults_exact(self, tmp_path, algorithm):
+        kw = dict(faults=FULL_FAULTS, algorithm=algorithm)
+        ta = make_trainer("fused", **kw)
+        ta.run(3)
+        ta.save_checkpoint(str(tmp_path))
+        tb = make_trainer("fused", **kw)
+        assert tb.restore(str(tmp_path)) == 3
+        tb.run(3)
+        tc = make_trainer("fused", **kw)
+        tc.run(6)
+        assert "fault" in tb.state      # the cache survived the trip
+        for a, b in zip(jax.tree_util.tree_leaves(tb.state),
+                        jax.tree_util.tree_leaves(tc.state)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert tb._clock == tc._clock
+        for rb, rc in zip(tb.history, tc.history[3:]):
+            np.testing.assert_array_equal(rb.mask, rc.mask)
+            assert rb.cumulative_s == rc.cumulative_s
+
+
+class TestTrainerFaultValidation:
+    def test_faults_device_count_mismatch_raises(self):
+        with pytest.raises(ValueError, match="n_devices"):
+            make_trainer("fused",
+                         faults=FaultConfig(n_devices=K + 1))
+
+    def test_centralized_rejects_faults(self):
+        pcfg = ProtocolConfig(n_devices=K, n_d=1, n_g=1, sample_size=4,
+                              server_sample_size=4)
+        with pytest.raises(ValueError, match="centralized|faults"):
+            Trainer(SPEC, pcfg, lambda k: dcgan.gan_init(k, CFG), DATA,
+                    KEY, algorithm="centralized", driver="host",
+                    faults=FaultConfig(n_devices=K))
+
+    def test_unknown_reducer_string_raises(self):
+        with pytest.raises(ValueError):
+            make_trainer("fused", reducer="median_of_means")
+
+    def test_reducer_string_normalizes(self):
+        t = make_trainer("fused", reducer="trimmed_mean")
+        assert isinstance(t.reducer, RobustConfig)
+        assert make_trainer("fused", reducer="mean").reducer is None
+
+
+@pytest.mark.slow
+@pytest.mark.robust
+class TestMeshFaultEquivalence:
+    """The 8-device matrix: host oracle vs stacked fused vs mesh fused
+    under the full fault program, both algorithms, masks BITWISE and
+    params to float32 tolerance — fault realizations are layout-
+    independent (the byzantine one-flat-draw trick and the keyed
+    dropout stream). Runs in CI's robust lane."""
+
+    def test_fault_matrix_on_8_device_mesh(self):
+        from conftest import run_on_host_mesh
+        run_on_host_mesh("""
+            import itertools
+            import jax, jax.numpy as jnp, numpy as np
+            from repro.configs.base import ProtocolConfig
+            from repro.configs.dcgan import DCGANConfig
+            from repro.core import Trainer
+            from repro.core.channel import ChannelConfig
+            from repro.core.faults import FaultConfig
+            from repro.kernels.robust_avg import RobustConfig
+            from repro.models import dcgan
+            from repro.models.specs import make_dcgan_spec
+
+            KEY = jax.random.PRNGKey(0)
+            CFG = DCGANConfig(nz=8, ngf=8, ndf=8, nc=1, image_size=8)
+            SPEC = make_dcgan_spec(CFG)
+            K = 8
+            DATA = jax.random.normal(jax.random.PRNGKey(9),
+                                     (K, 8, 8, 8, 1))
+            FAULTS = FaultConfig(n_devices=K, dropout_prob=0.25,
+                                 n_free_riders=2, n_byzantine=2,
+                                 straggler_factor=2.0, seed=1)
+
+            def make(driver, layout, algorithm, reducer=None):
+                pcfg = ProtocolConfig(
+                    n_devices=K, n_d=1, n_g=1, sample_size=4,
+                    server_sample_size=4, lr_d=1e-3, lr_g=1e-3,
+                    scheduler="round_robin", scheduling_ratio=0.5,
+                    quantize_bits=16)
+                chan = ChannelConfig(n_devices=K, seed=3, fading=False)
+                return Trainer(SPEC, pcfg,
+                               lambda k: dcgan.gan_init(k, CFG), DATA,
+                               KEY, channel_cfg=chan, driver=driver,
+                               layout=layout, algorithm=algorithm,
+                               faults=FAULTS, reducer=reducer)
+
+            def leaves(t):
+                return jax.tree_util.tree_leaves(t.state)
+
+            reducers = (None, RobustConfig(method="trimmed_mean", trim=1),
+                        RobustConfig(method="norm_clip"),
+                        RobustConfig(method="krum", krum_f=2))
+            for algorithm, reducer in itertools.product(
+                    ("proposed", "fedgan"), reducers):
+                th = make("host", "stacked", algorithm, reducer)
+                ts = make("fused", "stacked", algorithm, reducer)
+                tm = make("fused", "mesh", algorithm, reducer)
+                h, s, m = th.run(4), ts.run(4), tm.run(4)
+                for rh, rs, rm in zip(h, s, m):
+                    np.testing.assert_array_equal(rh.mask, rs.mask)
+                    np.testing.assert_array_equal(rh.mask, rm.mask)
+                    np.testing.assert_allclose(rh.wallclock_s,
+                                               rm.wallclock_s, rtol=1e-5)
+                for a, b in zip(leaves(th), leaves(tm)):
+                    np.testing.assert_allclose(
+                        np.asarray(a, np.float32),
+                        np.asarray(b, np.float32), atol=2e-5)
+                for a, b in zip(leaves(ts), leaves(tm)):
+                    np.testing.assert_allclose(
+                        np.asarray(a, np.float32),
+                        np.asarray(b, np.float32), atol=2e-5)
+                name = reducer.method if reducer else "mean"
+                print(f"fault matrix OK algorithm={algorithm} "
+                      f"reducer={name}")
+
+            # mesh resume under faults: stale cache + masks + wallclock
+            import tempfile
+            for algorithm in ("proposed", "fedgan"):
+                d = tempfile.mkdtemp()
+                ta = make("fused", "mesh", algorithm)
+                ta.run(2)
+                ta.save_checkpoint(d)
+                tb = make("fused", "mesh", algorithm)
+                tb.restore(d)
+                tb.run(2)
+                tc = make("fused", "mesh", algorithm)
+                tc.run(4)
+                for a, b in zip(leaves(tb), leaves(tc)):
+                    np.testing.assert_array_equal(np.asarray(a),
+                                                  np.asarray(b))
+                for rb, rc in zip(tb.history, tc.history[2:]):
+                    np.testing.assert_array_equal(rb.mask, rc.mask)
+                    assert rb.cumulative_s == rc.cumulative_s
+                print(f"mesh fault resume OK algorithm={algorithm}")
+        """)

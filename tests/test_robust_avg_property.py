@@ -1,0 +1,292 @@
+"""Property tests: the robust reducers (`kernels/robust_avg`) against
+their numpy `ref.py` twins, over random payload matrices, dtypes,
+BLOCK_N-edge sizes, and participation masks.
+
+Contract (see kernels/robust_avg/ops.py):
+  * every reducer agrees with its numpy reference on arbitrary (K, N)
+    payloads and nonnegative weight vectors with zeros (dropped /
+    unscheduled workers);
+  * identity regimes degrade to the plain weighted average EXACTLY —
+    trimmed_mean(trim=0), norm_clip with a huge clip factor, and
+    krum(f=0) all reproduce `wavg` (the zero-faults path costs nothing
+    and changes nothing);
+  * the tree-level wrapper (`averaging.weighted_average(robust=...)`)
+    preserves structure, shape, and dtype while flattening through the
+    ONE robust reduction;
+  * robustness does what it claims: an outlier row with enough honest
+    mass is rejected by trimmed_mean/krum where the plain mean moves.
+
+Hypothesis runs when importable (guarded like
+tests/test_averaging_property.py); the same check functions run on
+seeded twins unconditionally.
+"""
+import pytest
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.averaging import weighted_average
+from repro.kernels.robust_avg import RobustConfig, ref as robust_ref
+from repro.kernels.robust_avg.ops import (clip_weights, krum_weights,
+                                          robust_average)
+from repro.kernels.wavg.kernel import BLOCK_N
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def make_case(seed: int, *, k=None, n=None, zero_weights=False):
+    """Random (K, N) payload + weights, fully determined by `seed`."""
+    rng = np.random.default_rng(seed)
+    k = k or int(rng.integers(2, 10))
+    n = n or int(rng.integers(1, 400))
+    x = rng.standard_normal((k, n)).astype(np.float32) * rng.uniform(0.1, 8.0)
+    if zero_weights:
+        w = np.zeros(k, np.float32)
+    else:
+        w = rng.uniform(0.2, 5.0, k).astype(np.float32)
+        # participation mask: some workers dropped (weight exactly 0),
+        # like the scheduler/dropout output — keep >= 1 participant
+        drop = rng.uniform(size=k) < 0.3
+        drop[int(rng.integers(k))] = False
+        w = np.where(drop, 0.0, w)
+    return x, w
+
+
+def random_config(seed: int) -> RobustConfig:
+    rng = np.random.default_rng(seed ^ 0xC0FFEE)
+    method = ("trimmed_mean", "norm_clip", "krum")[int(rng.integers(3))]
+    return RobustConfig(method=method, trim=int(rng.integers(0, 3)),
+                        clip_factor=float(rng.uniform(0.5, 4.0)),
+                        krum_f=int(rng.integers(0, 3)))
+
+
+# ---------------------------------------------------------------------------
+# Shared checks
+# ---------------------------------------------------------------------------
+
+def plain_avg(x, w):
+    """Normalized weighted mean in float64 — what `wavg` computes after
+    `averaging._normalized` (the kernel's `wavg_ref` expects weights
+    already normalized, so the twin lives here)."""
+    w = np.asarray(w, np.float64)
+    wn = w / max(w.sum(), 1e-12)
+    return np.einsum("k,kn->n", wn, np.asarray(x, np.float64))
+
+
+def check_matches_ref(x, w, cfg: RobustConfig, atol=2e-5):
+    got = np.asarray(robust_average(jnp.asarray(x), jnp.asarray(w), cfg))
+    want = robust_ref.robust_ref(np.asarray(x, np.float64),
+                                 np.asarray(w, np.float64), cfg)
+    np.testing.assert_allclose(got, want.astype(np.float32), atol=atol)
+
+
+def check_identity_regime(x, w):
+    """trim=0 / huge clip / f=0 must equal the plain wavg reference."""
+    want = plain_avg(x, w).astype(np.float32)
+    for cfg in (RobustConfig(method="trimmed_mean", trim=0),
+                RobustConfig(method="norm_clip", clip_factor=1e9),
+                RobustConfig(method="krum", krum_f=0)):
+        got = np.asarray(robust_average(jnp.asarray(x), jnp.asarray(w), cfg))
+        np.testing.assert_allclose(got, want, atol=2e-5,
+                                   err_msg=f"identity regime {cfg.method}")
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis property tests
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    SETTINGS = dict(max_examples=20, deadline=None)
+
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 2 ** 16))
+    def test_prop_reducers_match_ref(seed):
+        x, w = make_case(seed)
+        check_matches_ref(x, w, random_config(seed))
+
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 2 ** 16), blocks=st.integers(1, 2),
+           off=st.integers(-2, 2))
+    def test_prop_reducers_match_ref_at_block_edges(seed, blocks, off):
+        n = max(1, blocks * BLOCK_N + off)
+        x, w = make_case(seed, n=n)
+        check_matches_ref(x, w, random_config(seed))
+
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 2 ** 16))
+    def test_prop_identity_regimes_equal_wavg(seed):
+        x, w = make_case(seed)
+        check_identity_regime(x, w)
+
+
+# ---------------------------------------------------------------------------
+# Seeded twins (always run)
+# ---------------------------------------------------------------------------
+
+class TestRobustReducersSeeded:
+    @pytest.mark.parametrize("method", ["trimmed_mean", "norm_clip",
+                                        "krum"])
+    @pytest.mark.parametrize("seed", range(4))
+    def test_matches_ref_random_payloads(self, method, seed):
+        x, w = make_case(seed)
+        check_matches_ref(x, w, RobustConfig(method=method, trim=1,
+                                             clip_factor=1.5, krum_f=1))
+
+    @pytest.mark.parametrize("method", ["trimmed_mean", "norm_clip",
+                                        "krum"])
+    @pytest.mark.parametrize("blocks", [1, 2])
+    def test_matches_ref_at_block_edges(self, method, blocks):
+        for off in (-1, 0, 1):
+            x, w = make_case(blocks * 7 + off + 1,
+                             n=max(1, blocks * BLOCK_N + off))
+            check_matches_ref(x, w, RobustConfig(method=method))
+
+    @pytest.mark.parametrize("seed", range(3))
+    def test_identity_regimes_equal_wavg(self, seed):
+        check_identity_regime(*make_case(seed))
+
+    def test_all_honest_uniform_weights_equal_wavg(self):
+        """With no outliers and equal weights, trimming symmetric noise
+        stays near the mean and clip/krum keep everyone — all three
+        land on (or near) the plain average."""
+        rng = np.random.default_rng(0)
+        x = rng.standard_normal((8, 64)).astype(np.float32)
+        w = np.ones(8, np.float32)
+        mean = x.mean(0)
+        for cfg in (RobustConfig(method="norm_clip", clip_factor=1e9),
+                    RobustConfig(method="krum", krum_f=0)):
+            got = np.asarray(robust_average(jnp.asarray(x),
+                                            jnp.asarray(w), cfg))
+            np.testing.assert_allclose(got, mean, atol=2e-5)
+
+    def test_zero_participants_guarded(self):
+        """All weights zero (straggler-only round): finite output, both
+        impl and ref."""
+        x, w = make_case(5, k=4, zero_weights=True)
+        for method in ("trimmed_mean", "norm_clip", "krum"):
+            cfg = RobustConfig(method=method)
+            got = np.asarray(robust_average(jnp.asarray(x),
+                                            jnp.asarray(w), cfg))
+            assert np.isfinite(got).all()
+            ref = robust_ref.robust_ref(np.asarray(x, np.float64),
+                                        np.asarray(w, np.float64), cfg)
+            np.testing.assert_allclose(got, ref.astype(np.float32),
+                                       atol=2e-5)
+
+    def test_dropped_rows_never_contribute(self):
+        """A zero-weight row full of garbage must not move any reducer
+        (participation masks gate the robust statistics too)."""
+        rng = np.random.default_rng(7)
+        x = rng.standard_normal((6, 96)).astype(np.float32)
+        w = np.array([1, 1, 1, 1, 1, 0], np.float32)
+        x_garbage = x.copy()
+        x_garbage[5] = 1e6
+        for method in ("trimmed_mean", "norm_clip", "krum"):
+            cfg = RobustConfig(method=method, trim=1, krum_f=1)
+            a = np.asarray(robust_average(jnp.asarray(x),
+                                          jnp.asarray(w), cfg))
+            b = np.asarray(robust_average(jnp.asarray(x_garbage),
+                                          jnp.asarray(w), cfg))
+            np.testing.assert_allclose(a, b, atol=1e-6)
+
+    def test_outlier_rejected_where_mean_moves(self):
+        """The point of the exercise: one 100x outlier among 7 honest
+        rows shifts the plain mean but not trimmed_mean or krum."""
+        rng = np.random.default_rng(11)
+        honest = rng.standard_normal((8, 128)).astype(np.float32)
+        attacked = honest.copy()
+        attacked[3] = 100.0
+        w = np.ones(8, np.float32)
+        honest_mean = honest[np.arange(8) != 3].mean(0)
+        plain = plain_avg(attacked, w)
+        assert np.abs(plain - honest_mean).max() > 1.0
+        for cfg in (RobustConfig(method="trimmed_mean", trim=1),
+                    RobustConfig(method="krum", krum_f=1)):
+            got = np.asarray(robust_average(jnp.asarray(attacked),
+                                            jnp.asarray(w), cfg))
+            assert np.abs(got - honest_mean).max() < 1.0, cfg.method
+
+    def test_config_validation(self):
+        with pytest.raises(ValueError):
+            RobustConfig(method="warp")
+        with pytest.raises(ValueError):
+            RobustConfig(method="trimmed_mean", trim=-1)
+        with pytest.raises(ValueError):
+            RobustConfig(method="norm_clip", clip_factor=0.0)
+        with pytest.raises(ValueError):
+            RobustConfig(method="krum", krum_f=-1)
+
+
+class TestWeightVectorReducers:
+    """norm_clip / krum compute EFFECTIVE weight vectors reduced by the
+    existing wavg kernel — pin the weight-vector semantics directly."""
+
+    def test_clip_weights_scale_bounded(self):
+        x, w = make_case(9, k=6, n=200)
+        w_eff = np.asarray(clip_weights(jnp.asarray(x), jnp.asarray(w),
+                                        clip_factor=1.0))
+        assert w_eff.shape == (6,)
+        # normalized by the ORIGINAL weight total: clipped rows shrink
+        # the aggregate toward zero, so the sum is <= 1, == 1 iff
+        # nothing clipped
+        assert w_eff.sum() <= 1.0 + 1e-5
+        unclipped = np.asarray(clip_weights(jnp.asarray(x),
+                                            jnp.asarray(w),
+                                            clip_factor=1e9))
+        np.testing.assert_allclose(unclipped.sum(), 1.0, atol=1e-5)
+        # dropped workers stay dropped
+        np.testing.assert_array_equal(w_eff[w == 0], 0.0)
+
+    def test_krum_weights_select_subset(self):
+        x, w = make_case(10, k=8, n=100)
+        w = np.ones(8, np.float32)
+        w_eff = np.asarray(krum_weights(jnp.asarray(x), jnp.asarray(w),
+                                        f=2, m=None))
+        sel = robust_ref.krum_selection_ref(np.asarray(x, np.float64),
+                                            w.astype(np.float64), f=2,
+                                            m=None)
+        np.testing.assert_array_equal(w_eff > 0, sel)
+        np.testing.assert_allclose(w_eff.sum(), 1.0, atol=1e-5)
+
+
+class TestTreeLevelRobustAverage:
+    """`averaging.weighted_average(..., robust=...)`: the stacked-layout
+    entry point — structure/shape/dtype preserved through the one
+    flatten -> robust reduction -> unflatten round trip."""
+
+    def make_tree(self, seed, k=6):
+        rng = np.random.default_rng(seed)
+        return {
+            "a": jnp.asarray(rng.standard_normal((k, 3, 5)), jnp.float32),
+            "b": {"c": jnp.asarray(rng.standard_normal((k, 7)),
+                                   jnp.bfloat16)},
+        }, jnp.asarray(rng.uniform(0.5, 2.0, k), jnp.float32)
+
+    @pytest.mark.parametrize("method", ["trimmed_mean", "norm_clip",
+                                        "krum"])
+    def test_structure_and_dtype_roundtrip(self, method):
+        tree, w = self.make_tree(0)
+        out = weighted_average(tree, w, robust=RobustConfig(method=method))
+        assert (jax.tree_util.tree_structure(out)
+                == jax.tree_util.tree_structure(
+                    jax.tree.map(lambda x: x[0], tree)))
+        assert out["a"].shape == (3, 5) and out["a"].dtype == jnp.float32
+        assert out["b"]["c"].shape == (7,)
+        assert out["b"]["c"].dtype == jnp.bfloat16
+
+    def test_identity_regime_matches_plain_tree_average(self):
+        tree, w = self.make_tree(1)
+        plain = weighted_average(tree, w)
+        robust = weighted_average(
+            tree, w, robust=RobustConfig(method="trimmed_mean", trim=0))
+        for a, b in zip(jax.tree_util.tree_leaves(plain),
+                        jax.tree_util.tree_leaves(robust)):
+            atol = 1e-5 if a.dtype == jnp.float32 else 0.02
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       atol=atol)
