@@ -22,6 +22,17 @@ the collective payload each TP rank actually gathers).
       `allgather_bytes_per_rank` column shrinks by ~1/N (each TP rank
       all-gathers only its parameter shard in Algorithm 2). Requires
       K x N addressable devices (16 for the CI tp=2 smoke).
+  --avg-impl ring (mesh only): Algorithm 2 runs as the chunked
+      quantized-payload ring collective (kernels/ring_wavg) instead of
+      the flat all-gather + Pallas wavg. The run is keyed "mesh_ring"
+      in BENCH_driver.json and additionally records a `ring_vs_flat`
+      comparison at K=8: fused rounds/sec ring vs flat on the bench
+      model (warning-only — the CPU-simulated mesh moves no real
+      wire), and the per-rank collective wire bytes at PAPER SCALE
+      (the ~661k-param 32x32 DCGAN disc the HLO-cost test lowers,
+      where BLOCK padding is noise). The bytes reduction is
+      deterministic, so `--smoke` FAILS if the encoded ring wire is
+      not <= 0.55x the flat f32 gather at 16 bits.
 
 The fused driver's win is everything per-round dispatch pays — dispatch
 latency, weight/metrics host sync, numpy scheduling — so the bench runs
@@ -79,7 +90,7 @@ def _gan_init(key):
 
 
 def make_trainer(driver: str, algorithm: str, layout: str = "stacked",
-                 tp: int = 1) -> Trainer:
+                 tp: int = 1, avg_impl: str = "pallas") -> Trainer:
     pcfg = ProtocolConfig(n_devices=K, n_d=1, n_g=1, sample_size=4,
                           server_sample_size=4, lr_d=1e-3, lr_g=1e-3)
     data = jax.random.normal(jax.random.PRNGKey(9), (K, 8, DIM))
@@ -87,7 +98,7 @@ def make_trainer(driver: str, algorithm: str, layout: str = "stacked",
     return Trainer(spec, pcfg, _gan_init, data,
                    jax.random.PRNGKey(0), algorithm=algorithm,
                    channel_cfg=ChannelConfig(n_devices=K), driver=driver,
-                   layout=layout, tp=tp)
+                   layout=layout, tp=tp, avg_impl=avg_impl)
 
 
 def allgather_bytes_per_rank(algorithm: str, tp: int) -> int:
@@ -102,11 +113,11 @@ def allgather_bytes_per_rank(algorithm: str, tp: int) -> int:
 
 def time_driver(driver: str, algorithm: str, n_rounds: int,
                 layout: str = "stacked", tp: int = 1,
-                repeats: int = 3) -> float:
+                avg_impl: str = "pallas", repeats: int = 3) -> float:
     """rounds/sec: best of `repeats` timed runs of n_rounds after a
     warmup run, so the jitted round (host) / chunk (fused) is already
     compiled and scheduler noise on shared machines is suppressed."""
-    trainer = make_trainer(driver, algorithm, layout, tp)
+    trainer = make_trainer(driver, algorithm, layout, tp, avg_impl)
     trainer.run(n_rounds)                       # warmup incl. compile
     jax.block_until_ready(trainer.state)
     best = 0.0
@@ -119,13 +130,15 @@ def time_driver(driver: str, algorithm: str, n_rounds: int,
 
 
 def bench_pair(algorithm: str, n_rounds: int, layout: str,
-               tp: int = 1) -> dict:
-    """host (per-round dispatch) vs fused, on one layout x tp."""
-    host_rps = time_driver("host", algorithm, n_rounds, layout, tp)
-    fused_rps = time_driver("fused", algorithm, n_rounds, layout, tp)
+               tp: int = 1, avg_impl: str = "pallas") -> dict:
+    """host (per-round dispatch) vs fused, on one layout x tp x impl."""
+    host_rps = time_driver("host", algorithm, n_rounds, layout, tp,
+                           avg_impl)
+    fused_rps = time_driver("fused", algorithm, n_rounds, layout, tp,
+                            avg_impl)
     speedup = fused_rps / host_rps
     up_bytes = allgather_bytes_per_rank(algorithm, tp)
-    tag = f"driver_bench_{layout_key(layout, tp)}_{algorithm}"
+    tag = f"driver_bench_{layout_key(layout, tp, avg_impl)}_{algorithm}"
     print(f"{tag}_host,{1e6 / host_rps:.1f},rounds_per_s={host_rps:.1f}")
     print(f"{tag}_fused,{1e6 / fused_rps:.1f},"
           f"rounds_per_s={fused_rps:.1f};speedup={speedup:.2f}x;"
@@ -134,13 +147,54 @@ def bench_pair(algorithm: str, n_rounds: int, layout: str,
             "speedup": speedup, "allgather_bytes_per_rank": up_bytes}
 
 
-def layout_key(layout: str, tp: int) -> str:
-    return layout if tp <= 1 else f"{layout}_tp{tp}"
+def layout_key(layout: str, tp: int, avg_impl: str = "pallas") -> str:
+    key = layout if tp <= 1 else f"{layout}_tp{tp}"
+    return key if avg_impl == "pallas" else f"{key}_{avg_impl}"
+
+
+def paper_scale_wire_bytes(bits: int = 16) -> dict:
+    """Deterministic per-rank collective bytes at PAPER SCALE: the
+    ~661k-param 32x32 DCGAN disc (the exact payload
+    tests/test_hlo_costs.py lowers and verifies these formulas against
+    the optimized HLO, byte for byte). flat = K * N * 4 (the payload is
+    dequantized to f32 BEFORE the all-gather); ring = the encoded wire
+    (`ring_wire_bytes_per_rank`)."""
+    from repro.configs.dcgan import DCGANConfig
+    from repro.kernels.ring_wavg.ops import ring_wire_bytes_per_rank
+    from repro.models import dcgan as dcgan_mod
+
+    cfg = DCGANConfig(nz=16, ngf=16, ndf=64, nc=1, image_size=32)
+    disc = dcgan_mod.gan_init(jax.random.PRNGKey(0), cfg)["disc"]
+    n = sum(int(x.size) for x in jax.tree_util.tree_leaves(disc))
+    flat = K * n * 4
+    ring = ring_wire_bytes_per_rank(disc, bits, K)
+    return {"payload_params": n, "bits": bits, "flat_bytes": flat,
+            "ring_bytes": ring, "bytes_ratio": ring / flat}
+
+
+def ring_vs_flat(n_rounds: int) -> dict:
+    """The --avg-impl ring extra: fused rounds/sec ring vs flat on the
+    bench model (K=8 mesh), plus the paper-scale wire-byte comparison.
+    Wallclock is informational on a CPU-simulated mesh (no real wire
+    to save); the bytes ratio is the deterministic gate."""
+    flat_rps = time_driver("fused", "proposed", n_rounds, "mesh",
+                           avg_impl="pallas")
+    ring_rps = time_driver("fused", "proposed", n_rounds, "mesh",
+                           avg_impl="ring")
+    out = {"fused_rps_flat": flat_rps, "fused_rps_ring": ring_rps,
+           "ring_over_flat_rps": ring_rps / flat_rps,
+           "wire": paper_scale_wire_bytes()}
+    print(f"driver_bench_ring_vs_flat,rps_ring={ring_rps:.1f};"
+          f"rps_flat={flat_rps:.1f};"
+          f"ratio={out['ring_over_flat_rps']:.2f}x;"
+          f"wire_bytes_ratio={out['wire']['bytes_ratio']:.3f}")
+    return out
 
 
 def write_json(path: str, layout: str, tp: int, results: dict,
-               n_rounds: int):
-    """Merge this layout x tp's numbers into BENCH_driver.json,
+               n_rounds: int, avg_impl: str = "pallas",
+               ring_cmp: dict | None = None):
+    """Merge this layout x tp x impl's numbers into BENCH_driver.json,
     preserving every other entry (and its own measurement length)."""
     payload = {}
     if os.path.exists(path):
@@ -149,8 +203,13 @@ def write_json(path: str, layout: str, tp: int, results: dict,
                 payload = json.load(f)
         except (OSError, json.JSONDecodeError):
             payload = {}
-    payload.setdefault("layouts", {})[layout_key(layout, tp)] = {
-        "k": K, "tp": tp, "rounds": n_rounds, "algorithms": results}
+    entry = {"k": K, "tp": tp, "rounds": n_rounds, "algorithms": results}
+    if avg_impl != "pallas":
+        entry["avg_impl"] = avg_impl
+    payload.setdefault("layouts", {})[
+        layout_key(layout, tp, avg_impl)] = entry
+    if ring_cmp is not None:
+        payload["ring_vs_flat"] = ring_cmp
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)
     print(f"wrote {path}")
@@ -167,6 +226,12 @@ def main(argv=None):
     ap.add_argument("--tp", type=int, default=1,
                     help="mesh only: TP width per worker slice; needs "
                          "K x tp addressable devices")
+    ap.add_argument("--avg-impl", choices=["flat", "ring"],
+                    default="flat",
+                    help="mesh only: Algorithm-2 collective — 'flat' "
+                         "(all-gather + Pallas wavg) or 'ring' (chunked "
+                         "quantized-payload ring); 'ring' also records "
+                         "the ring_vs_flat comparison")
     ap.add_argument("--json", default="BENCH_driver.json",
                     help="merge rounds/sec per layout x tp into this "
                          "file")
@@ -174,6 +239,9 @@ def main(argv=None):
     n_rounds = args.rounds or (20 if args.smoke else N_ROUNDS)
     if args.tp > 1 and args.layout != "mesh":
         ap.error("--tp requires --layout mesh")
+    if args.avg_impl == "ring" and (args.layout != "mesh" or args.tp > 1):
+        ap.error("--avg-impl ring requires --layout mesh --tp 1")
+    avg_impl = "pallas" if args.avg_impl == "flat" else "ring"
 
     if args.layout == "mesh":
         from repro.launch.mesh import devices_error
@@ -184,14 +252,17 @@ def main(argv=None):
             return 2
     algorithms = ("proposed", "fedgan")   # both layouts run both
 
-    results = {alg: bench_pair(alg, n_rounds, args.layout, args.tp)
+    results = {alg: bench_pair(alg, n_rounds, args.layout, args.tp,
+                               avg_impl)
                for alg in algorithms}
-    write_json(args.json, args.layout, args.tp, results, n_rounds)
+    ring_cmp = ring_vs_flat(n_rounds) if avg_impl == "ring" else None
+    write_json(args.json, args.layout, args.tp, results, n_rounds,
+               avg_impl, ring_cmp)
 
     status = 0
     for alg, r in results.items():
         s = r["speedup"]
-        lk = layout_key(args.layout, args.tp)
+        lk = layout_key(args.layout, args.tp, avg_impl)
         if args.smoke and s < 1.2:
             print(f"FAIL: {lk}/{alg} fused speedup {s:.2f}x "
                   f"below the 1.2x smoke threshold", file=sys.stderr)
@@ -199,6 +270,17 @@ def main(argv=None):
         elif s < 2.0:
             print(f"WARNING: {lk}/{alg} fused speedup {s:.2f}x "
                   f"below the 2x target", file=sys.stderr)
+    if ring_cmp is not None:
+        ratio = ring_cmp["wire"]["bytes_ratio"]
+        if ratio > 0.55:     # deterministic: fail even outside --smoke
+            print(f"FAIL: ring wire bytes ratio {ratio:.3f} above the "
+                  f"0.55 contract at 16 bits", file=sys.stderr)
+            status = 2
+        if ring_cmp["ring_over_flat_rps"] < 1.0:
+            print(f"WARNING: fused ring "
+                  f"{ring_cmp['ring_over_flat_rps']:.2f}x flat "
+                  f"rounds/sec (informational: the CPU-simulated mesh "
+                  f"moves no real wire)", file=sys.stderr)
     return status
 
 

@@ -6,7 +6,7 @@ Scheduling is expressed through the weight vector: w_k = m_k for
 scheduled devices and 0 otherwise, so one weighted mean covers partial
 participation, stragglers, and unequal sample sizes.
 
-Three interchangeable implementations:
+Four interchangeable implementations:
   * `weighted_average`      — stacked leading device axis (pjit/GSPMD path;
                               the mean over the stacked axis lowers to the
                               all-reduce when that axis is mesh-sharded)
@@ -16,7 +16,22 @@ Three interchangeable implementations:
     into one payload, all-gathered once, and reduced by the Pallas
     `wavg` kernel (the default inside `shard_round.shard_rounds_scan`)
   * the Pallas `wavg` kernel (repro.kernels.wavg) — the MXU reduction
-    both ``impl="pallas"`` paths call into (interpret mode on CPU).
+    both ``impl="pallas"`` paths call into (interpret mode on CPU)
+  * ``impl="ring"`` (repro.kernels.ring_wavg) — chunked double-buffered
+    `lax.ppermute` ring with dequantize-and-accumulate fused into the
+    Pallas kernel: the quantized uplink payload stays ENCODED on the
+    wire (int16 at 16 bits) and per-rank wire bytes drop from the flat
+    path's K*N*4 to ~(K-1)*N*2 — the large-K scaling path. Single
+    device axis, tp=1, no robust reducers (those stay flat). Pass
+    ``quantize_key``/``quantize_bits`` to keep the wire encoded.
+
+NO-SURVIVOR SEMANTICS: a round where every weight is zero (all workers
+dropped) has no defined average — `_normalized`'s `max(total, 1e-12)`
+guard would otherwise multiply the global by ~0. Every impl (host
+stacked, jnp, pallas, robust, ring) accepts ``fallback``: a pytree
+shaped like the result that is returned unchanged when the total weight
+is zero, so callers keep the previous global parameters
+(tests/test_no_survivor.py pins this under FaultConfig(dropout=1.0)).
 
 ROBUST REDUCERS: ``impl`` may also name a robust aggregation method
 from `repro.kernels.robust_avg` (`ROBUST_METHODS`: "trimmed_mean",
@@ -66,15 +81,26 @@ def _unflatten_row(avg_flat, leaves, treedef):
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+def _apply_fallback(avg, fallback, total):
+    """Keep `fallback` (the previous global) when no worker survived."""
+    if fallback is None:
+        return avg
+    return jax.tree.map(
+        lambda a, f: jnp.where(total > 0, a, f.astype(a.dtype)),
+        avg, fallback)
+
+
 def weighted_average(stacked_params, weights, *, impl: str = "jnp",
                      robust: Optional[RobustConfig] = None,
-                     interpret=None):
+                     interpret=None, fallback=None):
     """stacked_params: pytree with leading device axis K; weights: (K,).
 
     Returns the weighted average with the leading axis contracted.
     `robust` selects a robust reducer (repro.kernels.robust_avg) run on
     the flattened (K, N) payload with the RAW weights — one Pallas call
     for the whole tree, matching the mesh hot path column-for-column.
+    `fallback` (unstacked, result-shaped) is returned when the total
+    weight is zero — the no-survivor round keeps the previous global.
     """
     if robust is not None:
         from repro.kernels.robust_avg import ops as robust_ops
@@ -84,7 +110,9 @@ def weighted_average(stacked_params, weights, *, impl: str = "jnp",
             return stacked_params
         avg_flat = robust_ops.robust_average(
             flat, weights.astype(jnp.float32), robust, interpret=interpret)
-        return _unflatten_row(avg_flat, leaves, treedef)
+        avg = _unflatten_row(avg_flat, leaves, treedef)
+        return _apply_fallback(avg, fallback,
+                               jnp.sum(weights.astype(jnp.float32)))
 
     w = _normalized(weights)
 
@@ -98,12 +126,15 @@ def weighted_average(stacked_params, weights, *, impl: str = "jnp",
             wx = w.reshape((-1,) + (1,) * (x.ndim - 1)).astype(jnp.float32)
             return jnp.sum(x.astype(jnp.float32) * wx, axis=0).astype(x.dtype)
 
-    return jax.tree.map(avg_leaf, stacked_params)
+    avg = jax.tree.map(avg_leaf, stacked_params)
+    return _apply_fallback(avg, fallback,
+                           jnp.sum(weights.astype(jnp.float32)))
 
 
 def weighted_average_psum(local_params, local_weight, *, axis_names,
                           impl: str = "jnp", robust: Optional[RobustConfig] = None,
-                          interpret=None):
+                          interpret=None, fallback=None,
+                          quantize_key=None, quantize_bits: int = 32):
     """shard_map path: every mesh slice holds ITS device's parameters;
     Algorithm 2 is a weighted reduction over the device axes.
 
@@ -127,7 +158,31 @@ def weighted_average_psum(local_params, local_weight, *, axis_names,
     selected robust reducer with the RAW gathered weights (0 = dropped
     worker contributes nothing) — still exactly one payload all-gather
     + one Pallas kernel call per round.
+
+    impl="ring"  — the ring collective (repro.kernels.ring_wavg): k-1
+        chunked `lax.ppermute` hops with dequantize-and-accumulate
+        fused into the Pallas kernel. With `quantize_key` and
+        `quantize_bits` < 32 the payload travels ENCODED (int16 at 16
+        bits) using the same `quantize_tree` stream as the flat path's
+        uplink roundtrip. Single device axis only; does not compose
+        with `robust`.
+
+    `fallback` (local-params-shaped) is returned when the gathered
+    total weight is zero — every impl keeps the previous global on a
+    no-survivor round instead of multiplying it by ~0.
     """
+    if impl == "ring":
+        if robust is not None:
+            raise ValueError(
+                "impl='ring' does not compose with robust reducers; "
+                "robust aggregation stays on the flat gather path")
+        from repro.kernels.ring_wavg import ops as ring_ops
+
+        return ring_ops.ring_average_psum(
+            local_params, local_weight, axis_names=axis_names,
+            quantize_key=quantize_key, bits=quantize_bits,
+            interpret=interpret, fallback=fallback)
+
     if impl == "pallas" or robust is not None:
         from repro.kernels.wavg import ops as wavg_ops
 
@@ -153,7 +208,8 @@ def weighted_average_psum(local_params, local_weight, *, axis_names,
             out.append(avg_flat[off:off + x.size].reshape(x.shape)
                        .astype(x.dtype))
             off += x.size
-        return jax.tree_util.tree_unflatten(treedef, out)
+        avg = jax.tree_util.tree_unflatten(treedef, out)
+        return _apply_fallback(avg, fallback, jnp.sum(w_full))
 
     if impl != "jnp":
         raise ValueError(f"unknown weighted_average_psum impl {impl!r}")
@@ -165,7 +221,8 @@ def weighted_average_psum(local_params, local_weight, *, axis_names,
         summed = jax.lax.psum(contrib, axis_names)
         return (summed / jnp.maximum(total, 1e-12)).astype(x.dtype)
 
-    return jax.tree.map(avg_leaf, local_params)
+    avg = jax.tree.map(avg_leaf, local_params)
+    return _apply_fallback(avg, fallback, total)
 
 
 def broadcast_like(params, n: int):

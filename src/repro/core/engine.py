@@ -153,6 +153,11 @@ FUSED_ALGORITHMS = tuple(name for name, a in _ALGORITHMS.items() if a.fused)
 # Algorithms with a mesh (shard_map) execution layout.
 MESH_ALGORITHMS = tuple(name for name, a in _ALGORITHMS.items() if a.mesh)
 LAYOUTS = ("stacked", "mesh")
+# Algorithm-2 collective implementations on the mesh layout
+# (core/averaging.py): flat gather + wavg kernel ("pallas", the
+# default), per-leaf psum ("jnp"), or the quantized-payload ring
+# collective ("ring", kernels/ring_wavg).
+MESH_AVG_IMPLS = ("pallas", "jnp", "ring")
 
 
 def mesh_algorithm(name: str) -> _Algorithm:
@@ -191,6 +196,7 @@ class Trainer:
                  disc_step_flops: float = 1e9, gen_step_flops: float = 1e9,
                  driver: str = "auto", layout: str = "stacked",
                  mesh=None, device_axes=("data",), tp: int = 1,
+                 avg_impl: str = "pallas",
                  faults: Optional[FaultConfig] = None, reducer=None,
                  partition: Optional[str] = None, labels=None,
                  partition_alpha: float = 0.5, partition_seed: int = 0):
@@ -260,10 +266,23 @@ class Trainer:
             raise ValueError(
                 f"faults.n_devices={faults.n_devices} must match "
                 f"pcfg.n_devices={pcfg.n_devices}")
-        if tp > 1 and (faults is not None or reducer is not None):
-            raise NotImplementedError(
-                "faults/robust reducers are not supported under tensor "
-                "parallelism (tp > 1); run tp=1")
+        # One definition of the tp x faults/robust contract — shared
+        # with the mesh round builders and launch/steps.py.
+        shard_round.check_faults_tp(faults, reducer,
+                                    "model" if tp > 1 else None, tp)
+        if avg_impl not in MESH_AVG_IMPLS:
+            raise ValueError(f"unknown avg_impl {avg_impl!r} "
+                             f"(have {MESH_AVG_IMPLS})")
+        if avg_impl != "pallas" and layout != "mesh":
+            raise ValueError(
+                f"avg_impl={avg_impl!r} selects the mesh layout's "
+                f"Algorithm-2 collective; layout={layout!r} has no "
+                f"explicit collective (use layout='mesh' or the default "
+                f"avg_impl='pallas')")
+        shard_round.check_ring_support(avg_impl, device_axes,
+                                       "model" if tp > 1 else None, tp,
+                                       faults, reducer)
+        self.avg_impl = avg_impl
         self.faults, self.reducer = faults, reducer
         self._fault_prog = faults_lib.fault_program(faults)
 
@@ -322,6 +341,7 @@ class Trainer:
             self.mesh = mesh
             self._round = algo.mesh_round(spec, pcfg, mesh,
                                           device_axes=device_axes,
+                                          avg_impl=avg_impl,
                                           tp_axis=self.tp_axis, tp=tp,
                                           faults=faults, robust=reducer)
         else:
@@ -388,6 +408,7 @@ class Trainer:
                 disc_step_flops=self.disc_step_flops,
                 gen_step_flops=self.gen_step_flops,
                 uplink_bits=self._uplink_bits,
+                avg_impl=self.avg_impl,
                 eval_fn=eval_fn, eval_every=eval_every,
                 tp_axis=self.tp_axis, tp=self.tp,
                 faults=self.faults, robust=self.reducer)

@@ -84,9 +84,12 @@ class FaultConfig:
     seed: int = 0
 
     def __post_init__(self):
-        if not 0.0 <= self.dropout_prob < 1.0:
+        # dropout_prob=1.0 is legal: every round is a no-survivor round
+        # and the globals stay frozen (averaging's fallback semantics) —
+        # the degenerate regime tests/test_no_survivor.py pins.
+        if not 0.0 <= self.dropout_prob <= 1.0:
             raise ValueError(
-                f"dropout_prob must be in [0, 1) (got {self.dropout_prob})")
+                f"dropout_prob must be in [0, 1] (got {self.dropout_prob})")
         if self.n_free_riders < 0 or self.n_byzantine < 0:
             raise ValueError("n_free_riders/n_byzantine must be >= 0")
         if self.n_free_riders + self.n_byzantine > self.n_devices:

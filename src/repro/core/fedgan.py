@@ -111,12 +111,17 @@ def fedgan_round(spec: GanModelSpec, pcfg: ProtocolConfig, state,
         payload = faults_lib.corrupt_uploads_stacked(
             prog, round_key, payload, stale=stale)
 
+    # No-survivor rounds keep the previous globals (see protocol.gan_round).
+    prev = {"gen": state["gen"], "disc": state["disc"]}
     if reducer is not None:
-        avg = weighted_average(payload, weights, robust=reducer)
+        avg = weighted_average(payload, weights, robust=reducer,
+                               fallback=prev)
         gen_avg, disc_avg = avg["gen"], avg["disc"]
     else:
-        gen_avg = weighted_average(payload["gen"], weights)
-        disc_avg = weighted_average(payload["disc"], weights)
+        gen_avg = weighted_average(payload["gen"], weights,
+                                   fallback=prev["gen"])
+        disc_avg = weighted_average(payload["disc"], weights,
+                                    fallback=prev["disc"])
     new_state = {"gen": gen_avg, "disc": disc_avg,
                  "gen_opt": new_gen_opt, "disc_opt": new_disc_opt}
     if "fault" in state:

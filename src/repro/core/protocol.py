@@ -309,8 +309,11 @@ def gan_round(spec: GanModelSpec, pcfg: ProtocolConfig, state, data_stacked,
             prog, round_key, new_discs, stale=stale)
 
     # Steps 3–4 — Algorithm 2: weighted averaging (the uplink collective),
-    # optionally through a robust reducer (kernels/robust_avg).
-    disc_avg = weighted_average(new_discs, weights, robust=reducer)
+    # optionally through a robust reducer (kernels/robust_avg). On a
+    # no-survivor round (every weight zero) the previous global
+    # discriminator is kept — averaging nothing is not "multiply by ~0".
+    disc_avg = weighted_average(new_discs, weights, robust=reducer,
+                                fallback=state["disc"])
 
     # Algorithm 3 — serial: against fresh phi^{t+1}; parallel: against the
     # round-start phi^t, dataflow-independent of the averaging collective.

@@ -28,9 +28,15 @@ def _quantize_leaf(x, rnd, amax, levels):
     """One leaf's uniform stochastic quantization: (q_int32, scale).
     The ONE definition of the scale floor / rounding / clip math —
     `quantize_tree` and `roundtrip_tp` both call it, so the tp-bitwise
-    contract (TP width never changes the quantizer) cannot drift."""
-    scale = jnp.maximum(amax, 1e-12) / levels
-    scaled = x / scale
+    contract (TP width never changes the quantizer) cannot drift.
+
+    All math runs in float32 regardless of the leaf dtype: under bf16
+    type promotion the clip bound `levels` = 32767 is not representable
+    (it rounds to 32768), so a bf16-domain clip can emit q outside its
+    own [-levels-1, levels] contract — overflowing the int16 wire the
+    ring collective (kernels/ring_wavg) puts the payload on."""
+    scale = jnp.maximum(amax.astype(jnp.float32), 1e-12) / levels
+    scaled = x.astype(jnp.float32) / scale
     low = jnp.floor(scaled)
     q = low + (rnd < scaled - low)
     return jnp.clip(q, -levels - 1, levels).astype(jnp.int32), scale

@@ -224,28 +224,45 @@ def _proposed_slice_round(spec: GanModelSpec, pcfg: ProtocolConfig, axis,
         spec, pcfg, st["gen"], st["disc"], st["disc_opt"], data_k,
         round_key, my_index)
 
-    # Step 3 — quantized uplink, keyed exactly as the stacked layout's
-    # `roundtrip_stacked` (device index = this slice's DEVICE-axes
-    # index, shared by all its TP ranks), so every layout and TP width
-    # quantizes bitwise-identically.
-    if pcfg.quantize_bits < 32:
-        disc_k = _quantize_uplink(
-            tp_ctx, quantize.device_uplink_key(round_key, my_index),
-            disc_k, pcfg.quantize_bits)
+    if avg_impl == "ring":
+        # Ring hot path: the quantized uplink stays ENCODED on the wire
+        # — weighted_average_psum(impl="ring") quantizes with the SAME
+        # device_uplink_key stream as the flat path's roundtrip and
+        # streams the int16 payload around a chunked ppermute ring with
+        # dequantize-and-accumulate fused into the Pallas kernel
+        # (kernels/ring_wavg). Corrupting faults / robust reducers
+        # operate on dequantized trees, so they are flat-path-only
+        # (rejected at build time by `check_ring_support`).
+        disc_avg = weighted_average_psum(
+            disc_k, w_k, axis_names=axis, impl="ring",
+            quantize_key=quantize.device_uplink_key(round_key, my_index),
+            quantize_bits=pcfg.quantize_bits, fallback=st["disc"])
+    else:
+        # Step 3 — quantized uplink, keyed exactly as the stacked
+        # layout's `roundtrip_stacked` (device index = this slice's
+        # DEVICE-axes index, shared by all its TP ranks), so every
+        # layout and TP width quantizes bitwise-identically.
+        if pcfg.quantize_bits < 32:
+            disc_k = _quantize_uplink(
+                tp_ctx, quantize.device_uplink_key(round_key, my_index),
+                disc_k, pcfg.quantize_bits)
 
-    prog = faults_lib.fault_program(faults)
-    if prog is not None and prog.corrupts:
-        stale = st["fault"]["stale"] if "fault" in st else None
-        disc_k = faults_lib.corrupt_upload(prog, round_key, my_index,
-                                           disc_k, stale=stale)
+        prog = faults_lib.fault_program(faults)
+        if prog is not None and prog.corrupts:
+            stale = st["fault"]["stale"] if "fault" in st else None
+            disc_k = faults_lib.corrupt_upload(prog, round_key, my_index,
+                                               disc_k, stale=stale)
 
-    # Algorithm 2 over the DEVICE axes only — Pallas wavg kernel on the
-    # flat all-gathered payload by default (one collective + one
-    # kernel), per-leaf psum with impl="jnp"; `robust` routes the SAME
-    # flat-gather path through a robust reducer. Under TP each rank
-    # reduces just its shard: the gathered payload is 1/tp the model.
-    disc_avg = weighted_average_psum(disc_k, w_k, axis_names=axis,
-                                     impl=avg_impl, robust=robust)
+        # Algorithm 2 over the DEVICE axes only — Pallas wavg kernel on
+        # the flat all-gathered payload by default (one collective + one
+        # kernel), per-leaf psum with impl="jnp"; `robust` routes the
+        # SAME flat-gather path through a robust reducer. Under TP each
+        # rank reduces just its shard: the gathered payload is 1/tp the
+        # model. On a no-survivor round the fallback keeps the previous
+        # global discriminator.
+        disc_avg = weighted_average_psum(disc_k, w_k, axis_names=axis,
+                                         impl=avg_impl, robust=robust,
+                                         fallback=st["disc"])
 
     disc_for_gen = disc_avg if pcfg.schedule == "serial" else st["disc"]
     gen, gen_opt, gen_obj = server_update(spec, pcfg, st["gen"],
@@ -290,19 +307,30 @@ def _fedgan_slice_round(spec: GanModelSpec, pcfg: ProtocolConfig, axis,
         data_k, round_key, my_index)
 
     payload = {"gen": gen_k, "disc": disc_k}
-    if pcfg.quantize_bits < 32:
-        payload = _quantize_uplink(
-            tp_ctx, quantize.device_uplink_key(round_key, my_index),
-            payload, pcfg.quantize_bits)
+    prev = {"gen": st["gen"], "disc": st["disc"]}
+    if avg_impl == "ring":
+        # Same ring hot path as the proposed protocol: one encoded
+        # two-net payload streamed around the ring, dequantized in the
+        # accumulate kernel (see _proposed_slice_round).
+        avg = weighted_average_psum(
+            payload, w_k, axis_names=axis, impl="ring",
+            quantize_key=quantize.device_uplink_key(round_key, my_index),
+            quantize_bits=pcfg.quantize_bits, fallback=prev)
+    else:
+        if pcfg.quantize_bits < 32:
+            payload = _quantize_uplink(
+                tp_ctx, quantize.device_uplink_key(round_key, my_index),
+                payload, pcfg.quantize_bits)
 
-    prog = faults_lib.fault_program(faults)
-    if prog is not None and prog.corrupts:
-        stale = st["fault"]["stale"] if "fault" in st else None
-        payload = faults_lib.corrupt_upload(prog, round_key, my_index,
-                                            payload, stale=stale)
+        prog = faults_lib.fault_program(faults)
+        if prog is not None and prog.corrupts:
+            stale = st["fault"]["stale"] if "fault" in st else None
+            payload = faults_lib.corrupt_upload(prog, round_key, my_index,
+                                                payload, stale=stale)
 
-    avg = weighted_average_psum(payload, w_k, axis_names=axis,
-                                impl=avg_impl, robust=robust)
+        avg = weighted_average_psum(payload, w_k, axis_names=axis,
+                                    impl=avg_impl, robust=robust,
+                                    fallback=prev)
     new_st = {"gen": avg["gen"], "disc": avg["disc"],
               "gen_opt": gen_opt_k, "disc_opt": disc_opt_k}
     if "fault" in st:
@@ -410,16 +438,56 @@ def _channel_key(channel):
     return tuple(dataclasses.astuple(channel.cfg))
 
 
-def _check_faults_tp(faults, robust, tp_axis, tp: int):
+def check_faults_tp(faults, robust, tp_axis, tp: int):
     """Fault injection / robust reduction compose with the mesh layout
     at tp=1 only: under TP the per-slice payload is a model-axis shard,
     so byzantine noise keying, the stale cache, and shard-local norms/
-    distances would all diverge from the worker-global semantics."""
+    distances would all diverge from the worker-global semantics.
+
+    THE one definition of this contract — called from the mesh round
+    builders below, `engine.Trainer`, and `launch.steps`."""
     if tp_axis is not None and tp > 1 and (faults is not None
                                            or robust is not None):
         raise NotImplementedError(
             "faults/robust reducers are not supported under tensor "
             "parallelism (tp > 1); run tp=1")
+
+
+# Backwards-compatible alias (pre-PR-9 private name).
+_check_faults_tp = check_faults_tp
+
+
+def check_ring_support(avg_impl: str, device_axes, tp_axis, tp: int,
+                       faults, robust):
+    """Build-time contract for `avg_impl="ring"`: a single device axis
+    (the ring order is the axis order), tp == 1 (the encoded payload is
+    worker-global), no robust reducers and no upload-corrupting fault
+    programs (both operate on dequantized per-worker trees, which the
+    ring never materializes — they stay on the flat gather path).
+    Dropout/straggler fault programs compose fine: they only zero
+    weights."""
+    if avg_impl != "ring":
+        return
+    axes = (device_axes if isinstance(device_axes, (tuple, list))
+            else (device_axes,))
+    if len(axes) != 1:
+        raise NotImplementedError(
+            f"avg_impl='ring' reduces over a single device axis; "
+            f"got {tuple(axes)!r}")
+    if tp_axis is not None and tp > 1:
+        raise NotImplementedError(
+            "avg_impl='ring' is not supported under tensor parallelism "
+            "(tp > 1); the encoded ring payload is worker-global")
+    if robust is not None:
+        raise NotImplementedError(
+            "avg_impl='ring' does not compose with robust reducers; "
+            "use the flat path (avg_impl='pallas')")
+    prog = faults_lib.fault_program(faults)
+    if prog is not None and prog.corrupts:
+        raise NotImplementedError(
+            "avg_impl='ring' does not compose with upload-corrupting "
+            "fault programs (free riders / byzantine); use the flat "
+            "path (avg_impl='pallas')")
 
 
 def shard_map_round(spec: GanModelSpec, pcfg: ProtocolConfig, mesh,
@@ -429,7 +497,9 @@ def shard_map_round(spec: GanModelSpec, pcfg: ProtocolConfig, mesh,
     With `faults`, the host drives scheduling/dropout and this dispatch
     realizes the matching upload corruption; `robust` selects the
     Algorithm-2 robust reducer."""
-    _check_faults_tp(faults, robust, tp_axis, tp)
+    check_faults_tp(faults, robust, tp_axis, tp)
+    check_ring_support(avg_impl, device_axes, tp_axis, tp, faults,
+                       robust)
     return _memo_builder(
         ("proposed_round", spec, pcfg, mesh, tuple(device_axes), avg_impl,
          tp_axis, tp, faults, robust),
@@ -448,7 +518,9 @@ def fedgan_shard_map_round(spec: GanModelSpec, pcfg: ProtocolConfig, mesh,
     """Single FedGAN round per dispatch (the mesh FedGAN oracle).
     Expects gen_opt AND disc_opt stacked (every device trains both
     nets)."""
-    _check_faults_tp(faults, robust, tp_axis, tp)
+    check_faults_tp(faults, robust, tp_axis, tp)
+    check_ring_support(avg_impl, device_axes, tp_axis, tp, faults,
+                       robust)
     return _memo_builder(
         ("fedgan_round", spec, pcfg, mesh, tuple(device_axes), avg_impl,
          tp_axis, tp, faults, robust),
@@ -626,7 +698,9 @@ def shard_rounds_scan(spec: GanModelSpec, pcfg: ProtocolConfig, mesh,
     (see `_mesh_rounds_scan`), keyed bitwise-identically to
     `protocol.gan_rounds_scan` — including the fault realization
     (dropout masks, corruption draws) under a FaultConfig."""
-    _check_faults_tp(faults, robust, tp_axis, tp)
+    check_faults_tp(faults, robust, tp_axis, tp)
+    check_ring_support(avg_impl, device_axes, tp_axis, tp, faults,
+                       robust)
     build = lambda: _mesh_rounds_scan(
         partial(_proposed_slice_round, spec, pcfg, device_axes,
                 faults, robust),
@@ -662,7 +736,9 @@ def fedgan_shard_rounds_scan(spec: GanModelSpec, pcfg: ProtocolConfig, mesh,
     wall-clock composition — one donated shard_map `lax.scan` dispatch,
     keyed bitwise-identically to `fedgan.fedgan_rounds_scan` so the
     host oracle pins it."""
-    _check_faults_tp(faults, robust, tp_axis, tp)
+    check_faults_tp(faults, robust, tp_axis, tp)
+    check_ring_support(avg_impl, device_axes, tp_axis, tp, faults,
+                       robust)
     build = lambda: _mesh_rounds_scan(
         partial(_fedgan_slice_round, spec, pcfg, device_axes,
                 faults, robust),

@@ -1,0 +1,4 @@
+"""Ring-collective Algorithm 2: chunked double-buffered ppermute ring
+with dequantize-and-accumulate fused into the Pallas kernel."""
+from repro.kernels.ring_wavg.ops import (  # noqa: F401
+    ring_average_psum, ring_wire_bytes_per_rank)

@@ -1,0 +1,32 @@
+"""Order-independent float64 reference for the ring reduction."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core import quantize
+
+
+def ring_average_ref(stacked_tree, weights, *, round_key=None,
+                     bits: int = 32):
+    """sum_k w_norm[k] * dequant_k(tree_k), reduced in float64 numpy —
+    the order-independent twin the seeded property tests pin the ring
+    (and flat) collectives against. Quantization (bits < 32 with a
+    round_key) goes through the SAME `quantize_tree` streams as the
+    on-wire path, so the only thing under test is reduction order and
+    precision, never the quantized values."""
+    leaves, treedef = jax.tree_util.tree_flatten(stacked_tree)
+    k = leaves[0].shape[0]
+    w = np.asarray(weights, dtype=np.float64)
+    w_norm = w / max(float(w.sum()), 1e-12)
+    acc = [np.zeros(x.shape[1:], np.float64) for x in leaves]
+    for i in range(k):
+        dev = jax.tree_util.tree_unflatten(treedef, [x[i] for x in leaves])
+        if bits < 32 and round_key is not None:
+            key = quantize.device_uplink_key(round_key, i)
+            q, s = quantize.quantize_tree(key, dev, bits)
+            dev = quantize.dequantize_tree(q, s)
+        for j, leaf in enumerate(jax.tree_util.tree_leaves(dev)):
+            acc[j] = acc[j] + w_norm[i] * np.asarray(leaf, np.float64)
+    out = [a.astype(np.asarray(x).dtype) for a, x in zip(acc, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -78,7 +78,8 @@ def build_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
                      layout: str = "stacked",
                      algorithm: str = "proposed",
                      tp: Optional[int] = None,
-                     faults=None, reducer=None):
+                     faults=None, reducer=None,
+                     avg_impl: str = "pallas"):
     """The protocol round as the pod-scale train step, on either
     execution layout.
 
@@ -88,7 +89,10 @@ def build_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
     kernels.robust_avg.RobustConfig) swaps Algorithm 2 for a robust
     aggregate. Both are layout='mesh' features (the fused mesh engine
     owns scheduling + the averaging collective); requesting them on the
-    stacked builder raises.
+    stacked builder raises. `avg_impl` selects the mesh Algorithm-2
+    collective ("pallas" flat gather + wavg kernel, "jnp" per-leaf
+    psum, or "ring" — the quantized-payload ppermute ring of
+    kernels/ring_wavg; tp=1, no robust/corrupting faults).
 
     The paper's K devices = the mesh's device axes (pod x data slices).
     global_batch rows of real data are the per-round union of local
@@ -156,7 +160,8 @@ def build_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
     if layout == "mesh":
         return _build_mesh_train_step(cfg, shape, mesh, plan, pcfg,
                                       fuse_rounds, algorithm, tp,
-                                      faults=faults, reducer=reducer)
+                                      faults=faults, reducer=reducer,
+                                      avg_impl=avg_impl)
     if layout != "stacked":
         raise ValueError(f"unknown layout {layout!r}")
     if faults is not None or reducer is not None:
@@ -164,6 +169,11 @@ def build_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
             "faults/reducer require layout='mesh' (the fused mesh engine "
             "owns scheduling and the averaging collective); the stacked "
             "pod-scale step has no fault machinery")
+    if avg_impl != "pallas":
+        raise ValueError(
+            f"avg_impl={avg_impl!r} selects the mesh layout's explicit "
+            f"Algorithm-2 collective; layout='stacked' lowers the "
+            f"averaging through GSPMD (use layout='mesh')")
     if tp not in (None, 1):
         raise ValueError(
             f"tp={tp} applies to layout='mesh' only; on the stacked "
@@ -251,7 +261,8 @@ def _build_mesh_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh, plan,
                            pcfg: ProtocolConfig, fuse_rounds: int,
                            algorithm: str = "proposed",
                            tp: Optional[int] = None,
-                           faults=None, reducer=None):
+                           faults=None, reducer=None,
+                           avg_impl: str = "pallas"):
     """layout="mesh" of `build_train_step`: `fuse_rounds` complete rounds
     per dispatch inside shard_map, state + scheduler carry donated.
     algorithm selects the per-slice round body (proposed | fedgan);
@@ -259,6 +270,7 @@ def _build_mesh_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh, plan,
     slice as a Megatron TP group over that axis. `faults`/`reducer`
     thread the hostile-worker regime into the fused scan (tp=1 only)."""
     from repro.core import faults as faults_lib
+    from repro.core import shard_round
     from repro.core.channel import ChannelConfig
     from repro.core.engine import mesh_algorithm
     from repro.core.jax_channel import JaxChannel
@@ -296,12 +308,17 @@ def _build_mesh_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh, plan,
         raise ValueError(
             f"faults.n_devices={faults.n_devices} must match the mesh's "
             f"device-axes size {k_dev}")
+    # Shared contract checks (one definition, in core/shard_round.py).
+    shard_round.check_faults_tp(faults, reducer, tp_axis, tp)
+    shard_round.check_ring_support(avg_impl, plan.dev_axes, tp_axis, tp,
+                                   faults, reducer)
     channel = JaxChannel(ChannelConfig(n_devices=k_dev))
     scheduler = JaxScheduler(policy=pcfg.scheduler, n_devices=k_dev,
                              ratio=pcfg.scheduling_ratio)
     step = rounds_scan(spec, pcfg, mesh, max(1, fuse_rounds),
                        channel=channel, scheduler=scheduler,
-                       device_axes=plan.dev_axes, tp_axis=tp_axis, tp=tp,
+                       device_axes=plan.dev_axes, avg_impl=avg_impl,
+                       tp_axis=tp_axis, tp=tp,
                        faults=faults, robust=reducer)
 
     def init_fn(key):

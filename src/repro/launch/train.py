@@ -154,6 +154,15 @@ def main():
     ap.add_argument("--quantize-bits", type=int, default=16,
                     help="uplink quantization width (paper: 16; >=32 "
                          "disables quantization)")
+    ap.add_argument("--avg-impl", choices=["pallas", "jnp", "ring"],
+                    default="pallas",
+                    help="Algorithm-2 collective (layout mesh only): "
+                         "pallas = flat all-gather + wavg kernel; jnp = "
+                         "per-leaf psum; ring = the quantized-payload "
+                         "ppermute ring (kernels/ring_wavg) — the uplink "
+                         "stays encoded on the wire, ~2x fewer per-rank "
+                         "bytes at 16 bits (tp=1, plain mean, no "
+                         "free-riders/byzantine)")
     ap.add_argument("--reducer", default="mean",
                     choices=["mean", "trimmed_mean", "norm_clip", "krum"],
                     help="server aggregation rule (layout mesh only): "
@@ -234,6 +243,20 @@ def main():
     if (faults is not None or reducer is not None) and args.tp > 1:
         ap.error("faults/robust reducers are not supported under tensor "
                  "parallelism yet; use --tp 1")
+    if args.avg_impl != "pallas" and args.layout != "mesh":
+        ap.error("--avg-impl selects the mesh layout's Algorithm-2 "
+                 "collective: use --layout mesh")
+    if args.avg_impl == "ring":
+        if args.tp > 1:
+            ap.error("--avg-impl ring is not supported under tensor "
+                     "parallelism; use --tp 1")
+        if reducer is not None:
+            ap.error("--avg-impl ring does not compose with robust "
+                     "reducers; use --avg-impl pallas")
+        if args.free_riders > 0 or args.byzantine > 0:
+            ap.error("--avg-impl ring does not compose with "
+                     "upload-corrupting faults (free-riders/byzantine); "
+                     "use --avg-impl pallas")
 
     if args.distributed:
         jax.distributed.initialize()
@@ -261,7 +284,7 @@ def main():
                 algorithm=args.algorithm,
                 tp=args.tp if args.layout == "mesh" else None,
                 pcfg_overrides={"quantize_bits": args.quantize_bits},
-                faults=faults, reducer=reducer)
+                faults=faults, reducer=reducer, avg_impl=args.avg_impl)
         return step_cache[length]
 
     _, abstract_args = get_step(min(fuse, args.rounds) or 1)

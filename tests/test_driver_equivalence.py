@@ -281,6 +281,48 @@ class TestMeshLayoutSelection:
             assert algo.mesh_rounds_scan is not None
 
 
+class TestRingAvgImplSelection:
+    """Fast-lane validation of the `avg_impl` axis (construction only —
+    the 8-device ring execution matrix runs in the mesh lane below)."""
+
+    def _trainer(self, **kw):
+        return Trainer(SPEC, ProtocolConfig(n_devices=K),
+                       lambda k: dcgan.gan_init(k, CFG), DATA, KEY, **kw)
+
+    def test_unknown_avg_impl_raises(self):
+        with pytest.raises(ValueError, match="avg_impl"):
+            self._trainer(avg_impl="warp")
+
+    def test_ring_requires_mesh_layout(self):
+        with pytest.raises(ValueError, match="mesh"):
+            self._trainer(avg_impl="ring", layout="stacked")
+
+    def test_ring_rejects_robust_reducer(self):
+        with pytest.raises(NotImplementedError, match="robust"):
+            self._trainer(avg_impl="ring", layout="mesh",
+                          reducer="trimmed_mean")
+
+    def test_ring_rejects_corrupting_faults(self):
+        from repro.core.faults import FaultConfig
+        with pytest.raises(NotImplementedError, match="corrupt"):
+            self._trainer(avg_impl="ring", layout="mesh",
+                          faults=FaultConfig(n_devices=K, n_byzantine=1))
+        # dropout-only fault programs compose: they only zero weights
+        from repro.core import shard_round
+        shard_round.check_ring_support(
+            "ring", ("data",), None, 1,
+            FaultConfig(n_devices=K, dropout_prob=0.5), None)
+
+    def test_ring_rejects_tp_and_multi_axis(self):
+        from repro.core import shard_round
+        with pytest.raises(NotImplementedError, match="tensor parallel"):
+            shard_round.check_ring_support("ring", ("data",), "model", 2,
+                                           None, None)
+        with pytest.raises(NotImplementedError, match="single device"):
+            shard_round.check_ring_support("ring", ("rows", "cols"),
+                                           None, 1, None, None)
+
+
 class TestShardRoundBuilderMemo:
     """The shard_map builders memoize on their full (mesh, config)
     signature, so repeated Trainer constructions in one process reuse
@@ -458,6 +500,92 @@ class TestMeshFusedEquivalence:
                     assert rb.cumulative_s == rc.cumulative_s
                     np.testing.assert_array_equal(rb.mask, rc.mask)
                 print(f"mesh resume OK algorithm={algorithm}")
+        """)
+
+    @pytest.mark.slow
+    def test_mesh_ring_avg_impl_matches_host_and_flat(self):
+        """PR 9 tentpole acceptance: `avg_impl="ring"` on the fused mesh
+        engine reproduces the host oracle and the flat pallas mesh path
+        for BOTH algorithms x bits in {16, 32} — masks BITWISE, params
+        to float32 round-off (the ring changes reduction ORDER, so the
+        tolerance covers cross-rank accumulation rotation, not values:
+        the quantized wire realizes the same `quantize_tree` streams).
+        Also pins the mesh twin of tests/test_no_survivor.py: ring +
+        FaultConfig(dropout_prob=1.0) freezes the disc exactly."""
+        from conftest import run_on_host_mesh
+        run_on_host_mesh("""
+            import itertools
+            import jax, jax.numpy as jnp, numpy as np
+            from repro.configs.base import ProtocolConfig
+            from repro.configs.dcgan import DCGANConfig
+            from repro.core import Trainer
+            from repro.core.channel import ChannelConfig
+            from repro.core.faults import FaultConfig
+            from repro.models import dcgan
+            from repro.models.specs import make_dcgan_spec
+
+            KEY = jax.random.PRNGKey(0)
+            CFG = DCGANConfig(nz=8, ngf=8, ndf=8, nc=1, image_size=8)
+            SPEC = make_dcgan_spec(CFG)
+            K = 8
+            DATA = jax.random.normal(jax.random.PRNGKey(9),
+                                     (K, 8, 8, 8, 1))
+
+            def make(driver, layout, bits, algorithm, avg_impl="pallas",
+                     faults=None):
+                pcfg = ProtocolConfig(
+                    n_devices=K, n_d=1, n_g=1, sample_size=4,
+                    server_sample_size=4, lr_d=1e-3, lr_g=1e-3,
+                    scheduler="round_robin", scheduling_ratio=0.5,
+                    quantize_bits=bits)
+                chan = ChannelConfig(n_devices=K, seed=3, fading=False)
+                return Trainer(SPEC, pcfg,
+                               lambda k: dcgan.gan_init(k, CFG), DATA,
+                               KEY, channel_cfg=chan, driver=driver,
+                               layout=layout, algorithm=algorithm,
+                               avg_impl=avg_impl, faults=faults)
+
+            def leaves(t):
+                return jax.tree_util.tree_leaves(t.state)
+
+            for algorithm, bits in itertools.product(
+                    ("proposed", "fedgan"), (16, 32)):
+                th = make("host", "stacked", bits, algorithm)
+                tp = make("fused", "mesh", bits, algorithm)
+                tr = make("fused", "mesh", bits, algorithm,
+                          avg_impl="ring")
+                h, p, r = th.run(4), tp.run(4), tr.run(4)
+                for rh, rp, rr in zip(h, p, r):
+                    np.testing.assert_array_equal(rh.mask, rr.mask)
+                    np.testing.assert_array_equal(rp.mask, rr.mask)
+                    for k in rh.metrics:
+                        assert abs(rh.metrics[k] - rr.metrics[k]) < 1e-4
+                    np.testing.assert_allclose(rh.wallclock_s,
+                                               rr.wallclock_s, rtol=1e-5)
+                for a, b in zip(leaves(th), leaves(tr)):
+                    np.testing.assert_allclose(
+                        np.asarray(a, np.float32),
+                        np.asarray(b, np.float32), atol=1e-4)
+                for a, b in zip(leaves(tp), leaves(tr)):
+                    np.testing.assert_allclose(
+                        np.asarray(a, np.float32),
+                        np.asarray(b, np.float32), atol=1e-4)
+                print(f"ring matrix OK algorithm={algorithm} bits={bits}")
+
+            # no-survivor on the mesh: ring + dropout=1.0 freezes disc
+            for avg_impl in ("pallas", "ring"):
+                tr = make("fused", "mesh", 16, "proposed",
+                          avg_impl=avg_impl,
+                          faults=FaultConfig(n_devices=K,
+                                             dropout_prob=1.0))
+                disc0 = jax.tree.map(np.asarray, tr.state["disc"])
+                hist = tr.run(3)
+                assert all(not rec.mask.any() for rec in hist)
+                for a, f in zip(
+                        jax.tree_util.tree_leaves(tr.state["disc"]),
+                        jax.tree_util.tree_leaves(disc0)):
+                    np.testing.assert_array_equal(np.asarray(a), f)
+                print(f"mesh no-survivor OK avg_impl={avg_impl}")
         """)
 
 

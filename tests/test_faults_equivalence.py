@@ -118,8 +118,12 @@ class TestFaultProgramDeterminism:
                 np.asarray(prog.dropout_mask(rk)), prog.dropout_mask_np(rk))
 
     def test_config_validation(self):
+        # dropout_prob=1.0 (every worker drops every round) is LEGAL —
+        # the no-survivor round keeps the previous global
+        # (tests/test_no_survivor.py); only out-of-range values raise.
+        FaultConfig(n_devices=4, dropout_prob=1.0)
         with pytest.raises(ValueError, match="dropout_prob"):
-            FaultConfig(n_devices=4, dropout_prob=1.0)
+            FaultConfig(n_devices=4, dropout_prob=1.5)
         with pytest.raises(ValueError, match="exceed"):
             FaultConfig(n_devices=4, n_free_riders=3, n_byzantine=2)
         with pytest.raises(ValueError, match="straggler"):

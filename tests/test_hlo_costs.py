@@ -1,4 +1,9 @@
-"""The loop-aware HLO cost parser (the dry-run profiler)."""
+"""The loop-aware HLO cost parser (the dry-run profiler) — and the
+collective-byte contract it pins for the ring collective: at 16-bit
+quantization the ring's per-rank wire traffic must be well under half
+the flat all-gather path's (the payload travels encoded)."""
+import json
+
 import jax
 import jax.numpy as jnp
 import pytest
@@ -69,3 +74,74 @@ def test_parser_handles_tuple_computations():
     assert mod.entry is not None
     costs = mod.totals()
     assert costs["flops"] == pytest.approx(4 * 2 * 8 * 8 * 8, rel=0.05)
+
+
+@pytest.mark.slow
+def test_ring_collective_bytes_beat_flat_on_mesh():
+    """PR 9 acceptance: lower the fused mesh round scan for the flat
+    pallas path (bits=16 but the payload is dequantized BEFORE the
+    all-gather, so f32 travels) and the ring path (payload stays int16
+    on the wire), and compare what the optimized HLO actually moves.
+
+    Pins three things on a forced 8-device host mesh:
+      * ring wire bytes == `ring_wire_bytes_per_rank` EXACTLY (the
+        analytic formula driver_bench reports is what XLA emits)
+      * ring / flat collective bytes <= 0.55 at 16-bit (the headline
+        ~0.44: (K-1)*(N_pad*2 + 4/block) vs K*N*4)
+      * the ring program contains NO payload all-gather (only the tiny
+        weight gather survives)
+    """
+    from conftest import run_on_host_mesh
+    out = run_on_host_mesh("""
+        import json
+        import jax, jax.numpy as jnp
+        from repro.configs.base import ProtocolConfig
+        from repro.configs.dcgan import DCGANConfig
+        from repro.core import Trainer
+        from repro.core.channel import ChannelConfig
+        from repro.kernels.ring_wavg.ops import ring_wire_bytes_per_rank
+        from repro.launch.hlo_costs import hlo_costs
+        from repro.models import dcgan
+        from repro.models.specs import make_dcgan_spec
+
+        KEY = jax.random.PRNGKey(0)
+        # disc ~661k params: the payload must dwarf BLOCK_N padding for
+        # the wire-byte comparison to be about encoding, not padding
+        CFG = DCGANConfig(nz=16, ngf=16, ndf=64, nc=1, image_size=32)
+        SPEC = make_dcgan_spec(CFG)
+        K = 8
+        DATA = jax.random.normal(jax.random.PRNGKey(9), (K, 4, 32, 32, 1))
+
+        def lowered_costs(avg_impl):
+            pcfg = ProtocolConfig(n_devices=K, n_d=1, n_g=1,
+                                  sample_size=2, server_sample_size=2,
+                                  lr_d=1e-3, lr_g=1e-3, quantize_bits=16)
+            chan = ChannelConfig(n_devices=K, seed=3, fading=False)
+            tr = Trainer(SPEC, pcfg, lambda k: dcgan.gan_init(k, CFG),
+                         DATA, KEY, channel_cfg=chan, driver="fused",
+                         layout="mesh", avg_impl=avg_impl)
+            fn = tr._chunk_fn(1)        # ONE round per dispatch
+            text = jax.jit(fn).lower(tr.state, tr._sched_carry, tr.data,
+                                     tr.key, jnp.int32(0)) \
+                .compile().as_text()
+            return hlo_costs(text), tr
+
+        flat, tr = lowered_costs("pallas")
+        ring, _ = lowered_costs("ring")
+        print("RESULT " + json.dumps({
+            "flat": flat["bytes_by_kind"],
+            "ring": ring["bytes_by_kind"],
+            "analytic": ring_wire_bytes_per_rank(tr.state["disc"], 16, K),
+        }))
+    """)
+    res = json.loads(next(l for l in out.splitlines()
+                          if l.startswith("RESULT ")).split(" ", 1)[1])
+    flat_ag = res["flat"]["all-gather"]
+    ring_cp = res["ring"]["collective-permute"]
+    # the analytic formula is exact against the lowered HLO
+    assert ring_cp == res["analytic"]
+    # headline contract: encoded ring wire <= 0.55x the flat f32 gather
+    assert ring_cp / flat_ag <= 0.55, (ring_cp, flat_ag)
+    # the payload all-gather is GONE; anything left is the (K,) weight
+    # vector and similar scalars
+    assert res["ring"].get("all-gather", 0) <= 1024

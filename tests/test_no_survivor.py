@@ -1,0 +1,160 @@
+"""No-survivor rounds: when every worker drops, the globals FREEZE.
+
+The bug this pins (PR 9 satellite): a round where the total aggregation
+weight is zero has no defined average — `_normalized`'s
+`max(total, 1e-12)` guard silently multiplied the previous global by ~0
+instead of keeping it. Every averaging impl (host stacked jnp/pallas,
+robust reducers, mesh psum jnp/pallas, ring) now takes `fallback` and
+returns it unchanged when the total weight is zero, and both round
+bodies (protocol.gan_round, fedgan.fedgan_round) pass the round-start
+globals, so `FaultConfig(dropout_prob=1.0)` — now legal — freezes the
+trajectory identically on the host oracle and the fused scan.
+
+The mesh-layout twin of the Trainer regression runs inside the
+8-device subprocess matrix in test_driver_equivalence.py's mesh lane.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ProtocolConfig
+from repro.configs.dcgan import DCGANConfig
+from repro.core import Trainer
+from repro.core.averaging import weighted_average, weighted_average_psum
+from repro.core.channel import ChannelConfig
+from repro.core.faults import FaultConfig
+from repro.kernels.robust_avg import RobustConfig
+from repro.models import dcgan
+from repro.models.specs import make_dcgan_spec
+
+KEY = jax.random.PRNGKey(0)
+CFG = DCGANConfig(nz=8, ngf=8, ndf=8, nc=1, image_size=8)
+SPEC = make_dcgan_spec(CFG)
+K = 4
+DATA = jax.random.normal(jax.random.PRNGKey(9), (K, 8, 8, 8, 1))
+AXIS = "k"
+
+
+def make_case(seed=0, k=K):
+    rng = np.random.default_rng(seed)
+    tree = {"a": jnp.asarray(rng.standard_normal((k, 37)), jnp.float32),
+            "b": jnp.asarray(rng.standard_normal((k, 5, 3)), jnp.float32)}
+    fallback = {"a": jnp.asarray(rng.standard_normal(37), jnp.float32),
+                "b": jnp.asarray(rng.standard_normal((5, 3)), jnp.float32)}
+    return tree, jnp.zeros(k, jnp.float32), fallback
+
+
+def assert_is_fallback(out, fallback):
+    for a, f in zip(jax.tree_util.tree_leaves(out),
+                    jax.tree_util.tree_leaves(fallback)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(f))
+
+
+class TestFaultConfigValidation:
+    def test_dropout_prob_one_is_legal(self):
+        cfg = FaultConfig(n_devices=K, dropout_prob=1.0)
+        assert cfg.dropout_prob == 1.0
+
+    @pytest.mark.parametrize("p", [-0.1, 1.1])
+    def test_dropout_prob_out_of_range_raises(self, p):
+        with pytest.raises(ValueError, match="dropout_prob"):
+            FaultConfig(n_devices=K, dropout_prob=p)
+
+
+class TestStackedFallback:
+    """weighted_average (host/stacked path) across impls."""
+
+    @pytest.mark.parametrize("impl", ["jnp", "pallas"])
+    def test_zero_weights_return_fallback(self, impl):
+        tree, w, fb = make_case()
+        out = weighted_average(tree, w, impl=impl, fallback=fb)
+        assert_is_fallback(out, fb)
+
+    @pytest.mark.parametrize("method", ["trimmed_mean", "norm_clip",
+                                        "krum"])
+    def test_robust_zero_weights_return_fallback(self, method):
+        tree, w, fb = make_case()
+        out = weighted_average(tree, w, robust=RobustConfig(method=method),
+                               fallback=fb)
+        assert_is_fallback(out, fb)
+
+    def test_nonzero_weights_ignore_fallback(self):
+        tree, _, fb = make_case()
+        w = jnp.asarray([1.0, 2.0, 0.0, 3.0], jnp.float32)
+        with_fb = weighted_average(tree, w, fallback=fb)
+        without = weighted_average(tree, w)
+        assert_is_fallback(with_fb, without)
+
+
+class TestPsumFallback:
+    """weighted_average_psum (mesh path) across impls, collectives under
+    vmap(axis_name=...) — the test_averaging_property.py harness."""
+
+    @pytest.mark.parametrize("impl", ["jnp", "pallas", "ring"])
+    def test_zero_weights_return_fallback(self, impl):
+        tree, w, fb = make_case()
+        out = jax.vmap(
+            lambda t, wi: weighted_average_psum(
+                t, wi, axis_names=AXIS, impl=impl, fallback=fb),
+            axis_name=AXIS)(tree, w)
+        assert_is_fallback(jax.tree.map(lambda x: x[0], out), fb)
+
+    def test_robust_zero_weights_return_fallback(self):
+        tree, w, fb = make_case()
+        out = jax.vmap(
+            lambda t, wi: weighted_average_psum(
+                t, wi, axis_names=AXIS,
+                robust=RobustConfig(method="trimmed_mean"), fallback=fb),
+            axis_name=AXIS)(tree, w)
+        assert_is_fallback(jax.tree.map(lambda x: x[0], out), fb)
+
+
+def make_trainer(driver, *, algorithm="proposed", reducer=None):
+    pcfg = ProtocolConfig(n_devices=K, n_d=1, n_g=1, sample_size=4,
+                          server_sample_size=4, lr_d=1e-3, lr_g=1e-3,
+                          quantize_bits=16)
+    chan = ChannelConfig(n_devices=K, seed=3, fading=False)
+    faults = FaultConfig(n_devices=K, dropout_prob=1.0)
+    return Trainer(SPEC, pcfg, lambda k: dcgan.gan_init(k, CFG), DATA, KEY,
+                   channel_cfg=chan, driver=driver, algorithm=algorithm,
+                   faults=faults, reducer=reducer)
+
+
+class TestTrainerAllDropped:
+    """The end-to-end regression: FaultConfig(dropout_prob=1.0) freezes
+    the worker-averaged globals EXACTLY, in both drivers."""
+
+    @pytest.mark.parametrize("driver", ["host", "fused"])
+    def test_proposed_disc_frozen(self, driver):
+        tr = make_trainer(driver)
+        disc0 = jax.tree.map(np.asarray, tr.state["disc"])
+        hist = tr.run(4)
+        assert_is_fallback(tr.state["disc"], disc0)
+        assert all(r.metrics["participation"] == 0.0 for r in hist)
+        assert all(not r.mask.any() for r in hist)
+
+    @pytest.mark.parametrize("driver", ["host", "fused"])
+    def test_fedgan_gen_and_disc_frozen(self, driver):
+        tr = make_trainer(driver, algorithm="fedgan")
+        gen0 = jax.tree.map(np.asarray, tr.state["gen"])
+        disc0 = jax.tree.map(np.asarray, tr.state["disc"])
+        tr.run(4)
+        assert_is_fallback(tr.state["gen"], gen0)
+        assert_is_fallback(tr.state["disc"], disc0)
+
+    def test_drivers_agree(self):
+        th, tf = make_trainer("host"), make_trainer("fused")
+        h, f = th.run(3), tf.run(3)
+        for a, b in zip(jax.tree_util.tree_leaves(th.state["disc"]),
+                        jax.tree_util.tree_leaves(tf.state["disc"])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=2e-5)
+        for rh, rf in zip(h, f):
+            np.testing.assert_array_equal(rh.mask, rf.mask)
+
+    def test_robust_reducer_disc_frozen(self):
+        tr = make_trainer("fused", reducer="trimmed_mean")
+        disc0 = jax.tree.map(np.asarray, tr.state["disc"])
+        tr.run(3)
+        assert_is_fallback(tr.state["disc"], disc0)
