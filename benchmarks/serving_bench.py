@@ -1,0 +1,215 @@
+"""Serving engine benchmark: paged-cache memory vs the dense baseline,
+and a closed-loop load sweep (p50/p99 latency + tokens/sec vs offered
+QPS) through the async front-end.
+
+Two measurements, both merged into BENCH_serving.json:
+
+  cache — the SAME greedy workload runs through a dense engine
+      (per-slot max_len reservation) and a paged engine whose block pool
+      is sized to the workload's live tokens. Outputs must be identical
+      (sampling is keyed by (seed, rid, token_index), so tokens are
+      scheduling- and backend-independent); the paged engine's
+      persistent cache bytes per request must be STRICTLY below the
+      dense baseline — that is the point of paging, and `--smoke` exits
+      non-zero if it regresses.
+
+  load — a closed-loop generator submits Poisson arrivals at each
+      offered QPS through `ServingFrontend`, awaiting every request's
+      Future for end-to-end latency. Recorded per QPS point: completed
+      requests, p50/p99 latency (ms), decoded tokens/sec, wall time.
+
+The bench model is a reduced config (default qwen3-1.7b — full
+attention, where paging matters most; REPRO_SERVING_BENCH_ARCH
+overrides). Sizes shrink under --smoke so the CI lane finishes in
+seconds while still exercising admission, chunked prefill, any-position
+decode, retirement, and the paged pool.
+
+    PYTHONPATH=src python benchmarks/serving_bench.py           # full
+    PYTHONPATH=src python benchmarks/serving_bench.py --smoke   # CI
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch_config
+from repro.models import gan
+from repro.serving import ServingEngine, ServingFrontend, Request
+from repro.serving import cache as paging
+
+ARCH = os.environ.get("REPRO_SERVING_BENCH_ARCH", "qwen3-1.7b")
+SEED = 0
+
+
+def make_workload(cfg, n_requests: int, rng):
+    """(prompt, max_new) pairs with mixed lengths."""
+    return [(rng.integers(1, cfg.vocab, rng.integers(4, 24)).astype(np.int32),
+             int(rng.integers(4, 12)))
+            for _ in range(n_requests)]
+
+
+def run_engine(cfg, params, workload, *, batch_size, max_len, block_size,
+               n_blocks=None, prefill_chunk=16):
+    eng = ServingEngine(cfg, params, batch_size=batch_size, max_len=max_len,
+                        block_size=block_size, n_blocks=n_blocks,
+                        prefill_chunk=prefill_chunk, seed=SEED)
+    for i, (prompt, max_new) in enumerate(workload):
+        eng.submit(Request(rid=i, prompt=prompt, max_new_tokens=max_new))
+    finished = eng.run()
+    assert len(finished) == len(workload), (
+        f"{len(finished)}/{len(workload)} finished; "
+        f"rejected: {[r.failed for r in eng.rejected]}")
+    outputs = {r.rid: list(r.out_tokens) for r in finished}
+    return eng, outputs
+
+
+def bench_cache(cfg, params, *, batch_size, max_len, block_size,
+                n_requests):
+    """Dense vs right-sized paged pool on an identical greedy workload."""
+    rng = np.random.default_rng(0)
+    workload = make_workload(cfg, n_requests, rng)
+
+    dense_eng, dense_out = run_engine(
+        cfg, params, workload, batch_size=batch_size, max_len=max_len,
+        block_size=None)
+    # pool sized to the workload: enough blocks for a full batch of the
+    # LARGEST live request footprint (prompt + generated), not max_len
+    live = max(len(p) + m for p, m in workload)
+    n_blocks = batch_size * paging.slot_max_blocks(live, block_size) + 1
+    paged_eng, paged_out = run_engine(
+        cfg, params, workload, batch_size=batch_size, max_len=max_len,
+        block_size=block_size, n_blocks=n_blocks)
+
+    equal = dense_out == paged_out
+    dense_bytes = dense_eng.cache_bytes()
+    paged_bytes = paged_eng.cache_bytes()
+    return {
+        "requests": n_requests,
+        "max_live_tokens_per_request": live,
+        "dense_bytes": dense_bytes,
+        "paged_bytes": paged_bytes,
+        "dense_bytes_per_request": dense_bytes // batch_size,
+        "paged_bytes_per_request": paged_bytes // batch_size,
+        "paged_over_dense": round(paged_bytes / dense_bytes, 4),
+        "equal_outputs": bool(equal),
+        "paged_compile_count": paged_eng.compile_count,
+    }
+
+
+def bench_load(cfg, params, *, batch_size, max_len, block_size,
+               qps_points, n_requests):
+    """Closed-loop Poisson load through the async front-end."""
+    results = []
+    rng = np.random.default_rng(1)
+    for qps in qps_points:
+        eng = ServingEngine(cfg, params, batch_size=batch_size,
+                            max_len=max_len, block_size=block_size,
+                            prefill_chunk=16, seed=SEED)
+        workload = make_workload(cfg, n_requests, rng)
+        lat = {}
+        futures = []
+        with ServingFrontend(eng) as fe:
+            t_start = time.perf_counter()
+            for prompt, max_new in workload:
+                fut = fe.submit(prompt, max_new_tokens=max_new)
+                t_sub = time.perf_counter()
+                fut.add_done_callback(
+                    lambda f, t=t_sub: lat.__setitem__(
+                        id(f), time.perf_counter() - t))
+                futures.append(fut)
+                time.sleep(rng.exponential(1.0 / qps))
+            reqs = [f.result(timeout=300) for f in futures]
+            wall = time.perf_counter() - t_start
+        lats_ms = sorted(1e3 * lat[id(f)] for f in futures)
+        n_tok = sum(len(r.out_tokens) for r in reqs)
+        results.append({
+            "offered_qps": qps,
+            "completed": len(reqs),
+            "p50_ms": round(lats_ms[len(lats_ms) // 2], 2),
+            "p99_ms": round(lats_ms[min(len(lats_ms) - 1,
+                                        int(len(lats_ms) * 0.99))], 2),
+            "tokens_per_sec": round(n_tok / wall, 2),
+            "wall_s": round(wall, 2),
+        })
+        print(f"  qps={qps}: p50={results[-1]['p50_ms']}ms "
+              f"p99={results[-1]['p99_ms']}ms "
+              f"tok/s={results[-1]['tokens_per_sec']}")
+    return results
+
+
+def write_json(path, entry):
+    payload = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            payload = {}
+    payload[ARCH] = entry
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {path}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced CI run; exit non-zero if paged memory "
+                         "per request is not strictly below dense, or "
+                         "outputs diverge")
+    ap.add_argument("--batch-size", type=int, default=None)
+    ap.add_argument("--max-len", type=int, default=None)
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--json", default="BENCH_serving.json")
+    args = ap.parse_args(argv)
+
+    batch = args.batch_size or (2 if args.smoke else 4)
+    max_len = args.max_len or (128 if args.smoke else 256)
+    n_req = 6 if args.smoke else 24
+    qps_points = [2.0, 8.0] if args.smoke else [1.0, 4.0, 16.0, 64.0]
+
+    cfg = get_arch_config(ARCH).reduced()
+    params = gan.generator_init(jax.random.PRNGKey(0), cfg)
+
+    print(f"serving bench: {ARCH} (reduced), batch={batch}, "
+          f"max_len={max_len}, block={args.block_size}")
+    cache = bench_cache(cfg, params, batch_size=batch, max_len=max_len,
+                        block_size=args.block_size, n_requests=n_req)
+    print(f"  cache/request: dense {cache['dense_bytes_per_request']} B, "
+          f"paged {cache['paged_bytes_per_request']} B "
+          f"({cache['paged_over_dense']:.2f}x), "
+          f"equal_outputs={cache['equal_outputs']}")
+    load = bench_load(cfg, params, batch_size=batch, max_len=max_len,
+                      block_size=args.block_size, qps_points=qps_points,
+                      n_requests=n_req)
+
+    entry = {"engine": {"batch_size": batch, "max_len": max_len,
+                        "block_size": args.block_size,
+                        "prefill_chunk": 16},
+             "cache": cache, "load": load}
+    write_json(args.json, entry)
+
+    status = 0
+    if not cache["equal_outputs"]:
+        print("FAIL: paged outputs diverge from dense", file=sys.stderr)
+        status = 2
+    if cache["paged_bytes_per_request"] >= cache["dense_bytes_per_request"]:
+        print("FAIL: paged cache bytes/request not below dense baseline",
+              file=sys.stderr)
+        status = 2
+    if any(pt["completed"] != n_req for pt in load):
+        print("FAIL: load sweep dropped requests", file=sys.stderr)
+        status = 2
+    return status
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -129,14 +129,10 @@ class TpCtx:
 
 
 def _shard_map(f, *, mesh, in_specs, out_specs):
-    """jax.shard_map on new jax; jax.experimental.shard_map on 0.4.x
-    (where the replication-checker kwarg is `check_rep`, not `check_vma`)."""
-    if hasattr(jax, "shard_map"):
-        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_vma=False)
-    from jax.experimental.shard_map import shard_map
-    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                     check_rep=False)
+    """Version-compat shard_map — shared with the serving engine."""
+    from repro.launch.mesh import shard_map_compat
+    return shard_map_compat(f, mesh=mesh, in_specs=in_specs,
+                            out_specs=out_specs)
 
 
 def _unstack_state(state, stacked_keys):

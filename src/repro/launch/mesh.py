@@ -39,6 +39,19 @@ def use_mesh(mesh):
     return mesh
 
 
+def shard_map_compat(f, *, mesh, in_specs, out_specs):
+    """jax.shard_map on new jax; jax.experimental.shard_map on 0.4.x
+    (where the replication-checker kwarg is `check_rep`, not `check_vma`).
+    The ONE compat wrapper — the round engine and the serving engine both
+    route manual-mesh bodies through here."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
+
+
 def devices_error(n: int, context: str = "--layout mesh"):
     """The shared mesh-entry-point guard: the actionable message when
     fewer than `n` devices are addressable, else None. Callers check

@@ -183,16 +183,20 @@ def _kv_to_cache(kv, positions, window, cache_len: int):
 def _run_sublayer(params_i, cfg: ArchConfig, kind: str, h, *, inv_freq,
                   positions, cache, cache_index, enc_h, shared_params,
                   mode: str, cache_len: int = 0, ssd_scan_impl=None,
-                  tp_axis=None):
+                  cache_write_mask=None, paged_table=None, tp_axis=None):
     """Dispatch one sublayer. Returns (h, aux, new_cache_or_None)."""
     if kind in ("attn", "attn_local", "attn_global", "shared_attn"):
         p = shared_params if kind == "shared_attn" else params_i
         window = cfg.sublayer_window(kind)
         dropless = mode != "train"   # serving never capacity-drops
         if mode == "decode":
+            # only full-attention sublayers page (a sliding window is
+            # already a bounded per-slot ring buffer)
+            pt = paged_table if window is None else None
             return blocks.attn_layer_apply(
                 p, cfg, h, window=window, inv_freq=inv_freq,
                 positions=positions, cache=cache, cache_index=cache_index,
+                cache_write_mask=cache_write_mask, paged_table=pt,
                 moe_dropless=dropless, tp_axis=tp_axis)
         h, aux, kv = blocks.attn_layer_apply(
             p, cfg, h, window=window, inv_freq=inv_freq, positions=positions,
@@ -204,7 +208,8 @@ def _run_sublayer(params_i, cfg: ArchConfig, kind: str, h, *, inv_freq,
         return h, aux, new_cache
     if kind == "ssm":
         if mode == "decode":
-            return blocks.ssm_layer_apply(params_i, cfg, h, state=cache)
+            return blocks.ssm_layer_apply(params_i, cfg, h, state=cache,
+                                          token_mask=cache_write_mask)
         return blocks.ssm_layer_apply(params_i, cfg, h,
                                       scan_impl=ssd_scan_impl,
                                       return_state=(mode == "prefill"))
@@ -225,12 +230,19 @@ def backbone_apply(params, cfg: ArchConfig, h, *, mode: str = "train",
                    caches=None, cache_index=None, positions=None,
                    enc_h=None, remat: bool = True, ssd_scan_impl=None,
                    prefill_cache_len: Optional[int] = None, act_spec=None,
-                   tp_axis=None):
+                   cache_write_mask=None, paged_table=None, tp_axis=None):
     """Run the backbone.
 
     h: (b, s, d) hidden states (already embedded / projected).
     mode: "train" | "prefill" | "decode".
-    caches/cache_index: decode state (see init_decode_caches).
+    caches/cache_index: decode state (see init_decode_caches). Serving
+        passes cache_index=None with explicit per-token `positions`
+        (b, s) — every cache insert then lands at its own absolute
+        position (any-position batched decode / chunked prefill).
+    cache_write_mask: (b, s) bool — tokens whose cache/state writes are
+        exact no-ops (inactive serving slots, padded chunk tails).
+    paged_table: (b, max_blocks) int32 block tables; full-attention
+        caches are then shared block pools (see serving.cache).
     enc_h: encoder or image embeddings for cross sublayers.
     tp_axis: Megatron tensor parallelism of the dense feed-forward
         blocks over a manual (shard_map) mesh axis — `params` then hold
@@ -275,6 +287,7 @@ def backbone_apply(params, cfg: ArchConfig, h, *, mode: str = "train",
                 positions=positions, cache=cache_i, cache_index=cache_index,
                 enc_h=enc_h, shared_params=shared_params, mode=mode,
                 cache_len=cache_len, ssd_scan_impl=ssd_scan_impl,
+                cache_write_mask=cache_write_mask, paged_table=paged_table,
                 tp_axis=tp_axis)
             aux = aux + aux_i
             if new_cache_i is not None:
@@ -294,6 +307,24 @@ def backbone_apply(params, cfg: ArchConfig, h, *, mode: str = "train",
 
     h = blocks._norm_apply(cfg, params["final_norm"], h)
     return {"h": h, "aux": aux, "caches": caches_out if caches_out else None}
+
+
+def cross_decode_kv(params, cfg: ArchConfig, enc_h):
+    """Project encoder/image states through every cross sublayer's k/v.
+
+    Returns {"subI": {"k": (G, b, t, kv, hd), "v": ...}} so a serving
+    engine can populate per-slot cross caches at admission (decode then
+    runs kv_override against them) without a full prefill pass.
+    """
+    out = {}
+    for i, kind in enumerate(cfg.group_pattern):
+        if kind != "cross":
+            continue
+        attn_p = params["groups"][f"sub{i}"]["attn"]
+        out[f"sub{i}"] = jax.vmap(
+            lambda p: nn.attention_kv(p, enc_h, n_kv_heads=cfg.n_kv_heads,
+                                      qk_norm=cfg.qk_norm))(attn_p)
+    return out
 
 
 def encoder_apply(params, cfg: ArchConfig, feats, *, remat: bool = True):

@@ -55,17 +55,21 @@ def attn_layer_init(key, cfg: ArchConfig, *, causal: bool = True):
 
 def attn_layer_apply(params, cfg: ArchConfig, h, *, window: Optional[int],
                      inv_freq, positions, causal: bool = True,
-                     cache=None, cache_index=None, return_kv: bool = False,
+                     cache=None, cache_index=None, cache_write_mask=None,
+                     paged_table=None, return_kv: bool = False,
                      moe_dropless: bool = False, tp_axis=None):
     """Returns (h, aux_loss, new_cache_or_kv). tp_axis runs the dense
     feed-forward Megatron-style inside a shard_map slice (attention and
-    MoE replicate over the model axis)."""
+    MoE replicate over the model axis). cache_write_mask / paged_table
+    select the serving scatter/paged cache paths (see attention_apply)."""
     x = _norm_apply(cfg, params["ln_attn"], h)
     out = nn.attention_apply(
         params["attn"], x, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
         inv_freq=inv_freq, q_positions=positions, causal=causal,
         window=window, qk_norm=cfg.qk_norm,
-        cache=cache, cache_index=cache_index, return_kv=return_kv,
+        cache=cache, cache_index=cache_index,
+        cache_write_mask=cache_write_mask, paged_table=paged_table,
+        return_kv=return_kv,
         flash_repeat_kv=cfg.flash_repeat_kv)
     if cache is not None or return_kv:
         attn_out, new_cache = out
@@ -153,7 +157,8 @@ def ssm_layer_init(key, cfg: ArchConfig):
     }
 
 
-def ssm_layer_apply(params, cfg: ArchConfig, h, *, state=None, scan_impl=None,
+def ssm_layer_apply(params, cfg: ArchConfig, h, *, state=None,
+                    token_mask=None, scan_impl=None,
                     return_state: bool = False):
     """Returns (h, aux, new_state)."""
     s = cfg.ssm
@@ -161,7 +166,8 @@ def ssm_layer_apply(params, cfg: ArchConfig, h, *, state=None, scan_impl=None,
     out = nn.ssd_mixer_apply(
         params["mixer"], x, d_state=s.d_state, head_dim=s.head_dim,
         expand=s.expand, n_groups=s.n_groups, chunk=s.chunk,
-        state=state, scan_impl=scan_impl, return_state=return_state)
+        state=state, token_mask=token_mask, scan_impl=scan_impl,
+        return_state=return_state)
     if state is not None or return_state:
         mixed, new_state = out
     else:

@@ -76,20 +76,28 @@ def generator_lm_init(key, cfg: ArchConfig):
 
 
 def generator_lm_apply(params, cfg: ArchConfig, tokens, *, mode: str = "train",
-                       caches=None, cache_index=None, enc_feats=None,
-                       remat: bool = True, prefill_cache_len=None):
+                       caches=None, cache_index=None, positions=None,
+                       cache_write_mask=None, paged_table=None,
+                       enc_feats=None, remat: bool = True,
+                       prefill_cache_len=None, tp_axis=None):
     """LM mode: tokens -> logits. Used by serving (prefill/decode) and
-    by the LM-pretraining example."""
+    by the LM-pretraining example.
+
+    positions/cache_write_mask/paged_table: serving decode conventions
+    (any-position batched decode, chunked prefill, paged caches) — see
+    backbone_apply. tp_axis: Megatron feed-forward inside a shard_map
+    slice (train-to-serve: same sharded-leaf contract as training)."""
     h = nn.embedding_apply(params["embed"], tokens)
     # decode attends cross-attention through the prefilled cache; the
     # encoder only runs on train/prefill.
     enc_h = None if mode == "decode" else _encode(params, cfg, enc_feats,
                                                   remat=remat)
-    positions = None
     out = backbone_apply(params["backbone"], cfg, h, mode=mode,
                          caches=caches, cache_index=cache_index,
                          positions=positions, enc_h=enc_h, remat=remat,
-                         prefill_cache_len=prefill_cache_len)
+                         prefill_cache_len=prefill_cache_len,
+                         cache_write_mask=cache_write_mask,
+                         paged_table=paged_table, tp_axis=tp_axis)
     logits = out["h"] @ params["lm_head"].astype(out["h"].dtype)
     return {"logits": logits, "aux": out["aux"], "caches": out["caches"]}
 

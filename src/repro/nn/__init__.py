@@ -22,7 +22,7 @@ from repro.nn.norms import (
 )
 from repro.nn.embed import embedding_init, embedding_apply
 from repro.nn.rope import rope_frequencies, apply_rope
-from repro.nn.attention import attention_init, attention_apply
+from repro.nn.attention import attention_init, attention_apply, attention_kv
 from repro.nn.mlp import mlp_init, mlp_apply
 from repro.nn.moe import moe_init, moe_apply
 from repro.nn.ssm import ssd_mixer_init, ssd_mixer_apply, ssd_scan_ref

@@ -116,10 +116,36 @@ def build_mask(q_positions, k_positions, *, causal: bool,
     return jnp.where(allowed, 0.0, NEG_INF).astype(jnp.float32)
 
 
+def attention_kv(params, kv_x, *, n_kv_heads: int, qk_norm: bool = False):
+    """Project cross-attention keys/values once (decode-cache fill).
+
+    Matches the k/v the cross prefill path produces (no RoPE — cross
+    attention never rotates), so a serving engine can populate the
+    per-slot cross caches at admission without a full prefill pass.
+    """
+    head_dim = params["wk"].shape[1] // n_kv_heads
+    k = _project(params, "k", kv_x, n_kv_heads, head_dim)
+    v = _project(params, "v", kv_x, n_kv_heads, head_dim)
+    if qk_norm:
+        k = rmsnorm_apply(params["k_norm"], k)
+    return {"k": k, "v": v}
+
+
+def _dedup_ring_slots(slots, positions, mask):
+    """Last-write-wins for scatter inserts into a ring buffer: when two
+    tokens of one chunk map to the same ring slot (chunk longer than the
+    window), keep only the latest position per slot."""
+    later_same = (slots[:, :, None] == slots[:, None, :]) \
+        & mask[:, None, :] \
+        & (positions[:, None, :] > positions[:, :, None])
+    return mask & ~later_same.any(axis=-1)
+
+
 def attention_apply(params, x, *, n_heads: int, n_kv_heads: int,
                     inv_freq=None, q_positions=None, kv_positions=None,
                     causal: bool = True, window: Optional[int] = None,
                     kv_x=None, cache=None, cache_index=None,
+                    cache_write_mask=None, paged_table=None,
                     qk_norm: bool = False, extra_mask=None,
                     return_kv: bool = False, kv_override=None,
                     flash_repeat_kv: bool = False):
@@ -132,6 +158,21 @@ def attention_apply(params, x, *, n_heads: int, n_kv_heads: int,
            absolute positions, "valid": (b, L) bool}. When given with
            cache_index, the fresh k/v are inserted at that slot index
            (decode), and attention runs over the whole cache.
+
+    Serving (any-position) cache conventions — `cache` given with
+    `cache_index=None`:
+      * dense scatter insert: each token's cache slot is its absolute
+        position `q_positions[b, s]` (mod L for sliding windows), so a
+        batch can decode at arbitrary per-slot positions, and a chunk
+        of s > 1 prompt tokens lands at its positions in one call.
+        `cache_write_mask` (b, s) drops writes (inactive slots, padded
+        chunk tail) — dropped tokens leave the cache bitwise unchanged.
+      * paged insert (`paged_table` (b, max_blocks) given): cache leaves
+        are a shared BLOCK POOL {"k": (n_blocks, bs, kv, hd), ...,
+        "pos"/"valid": (n_blocks, bs)}; token positions map through the
+        slot's block table into pool rows, and attention runs over the
+        table-gathered per-slot view. Block 0 is the never-written null
+        block that padding table entries point at.
     Returns y (and updated cache / fresh kv when requested).
     """
     b, s, _ = x.shape
@@ -178,10 +219,17 @@ def attention_apply(params, x, *, n_heads: int, n_kv_heads: int,
     if q_positions is None:
         q_positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
     if kv_positions is None:
-        kv_positions = (
-            q_positions if kv_x is None
-            else jnp.broadcast_to(jnp.arange(kv_src.shape[1], dtype=jnp.int32),
-                                  (b, kv_src.shape[1])))
+        if kv_override is not None:
+            # pre-projected k/v (cross-attn decode): positions index the
+            # override's own length, not the query chunk's
+            kv_positions = jnp.broadcast_to(
+                jnp.arange(k.shape[1], dtype=jnp.int32), (b, k.shape[1]))
+        elif kv_x is None:
+            kv_positions = q_positions
+        else:
+            kv_positions = jnp.broadcast_to(
+                jnp.arange(kv_src.shape[1], dtype=jnp.int32),
+                (b, kv_src.shape[1]))
 
     if inv_freq is not None:
         q = apply_rope(q, q_positions, inv_freq)
@@ -189,9 +237,91 @@ def attention_apply(params, x, *, n_heads: int, n_kv_heads: int,
             k = apply_rope(k, kv_positions, inv_freq)
 
     k_valid = None
-    if cache is not None:
-        assert cache_index is not None, "decode requires cache_index"
-        # Insert the fresh kv at slot cache_index (ring-buffer for SWA).
+    if cache is not None and paged_table is not None:
+        # Paged insert: positions map through the slot's block table into
+        # rows of the shared pool; masked/overflow writes are routed to an
+        # out-of-range flat index and dropped (NEVER a negative index —
+        # negative scatter indices wrap in JAX).
+        n_blocks, blk = cache["k"].shape[0], cache["k"].shape[1]
+        max_blocks = paged_table.shape[1]
+        pos = kv_positions.astype(jnp.int32)
+        blk_idx = jnp.clip(pos // blk, 0, max_blocks - 1)
+        block_ids = jnp.take_along_axis(paged_table, blk_idx, axis=1)  # (b, s)
+        flat = block_ids * blk + pos % blk
+        mask = (cache_write_mask if cache_write_mask is not None
+                else jnp.ones((b, s), dtype=bool))
+        # block 0 is the reserved null block: padding table entries point
+        # at it and it must never be written
+        mask = mask & (block_ids > 0)
+        flat = jnp.where(mask, flat, n_blocks * blk)
+        fshape = (n_blocks * blk,)
+        k_pool = cache["k"].reshape(fshape + cache["k"].shape[2:])
+        v_pool = cache["v"].reshape(fshape + cache["v"].shape[2:])
+        pos_pool = cache["pos"].reshape(fshape)
+        val_pool = cache["valid"].reshape(fshape)
+        k_pool = k_pool.at[flat].set(k.astype(k_pool.dtype), mode="drop")
+        v_pool = v_pool.at[flat].set(v.astype(v_pool.dtype), mode="drop")
+        pos_pool = pos_pool.at[flat].set(pos.astype(pos_pool.dtype), mode="drop")
+        val_pool = val_pool.at[flat].set(jnp.ones((b, s), bool), mode="drop")
+        new_cache = {"k": k_pool.reshape(cache["k"].shape),
+                     "v": v_pool.reshape(cache["v"].shape),
+                     "pos": pos_pool.reshape(cache["pos"].shape),
+                     "valid": val_pool.reshape(cache["valid"].shape)}
+        # gathered per-slot view (b, max_blocks*blk, ...): transient, so
+        # persistent memory stays O(pool) while attention sees a dense run
+        view = max_blocks * blk
+        k = jnp.take(new_cache["k"], paged_table, axis=0).reshape(
+            (b, view) + cache["k"].shape[2:]).astype(q.dtype)
+        v = jnp.take(new_cache["v"], paged_table, axis=0).reshape(
+            (b, view) + cache["v"].shape[2:]).astype(q.dtype)
+        kv_positions = jnp.take(new_cache["pos"], paged_table,
+                                axis=0).reshape(b, view)
+        k_valid = jnp.take(new_cache["valid"], paged_table,
+                           axis=0).reshape(b, view)
+    elif cache is not None and cache_index is None:
+        # Dense scatter insert at per-token absolute positions (serving:
+        # any-position batched decode / chunked prefill). Masked writes go
+        # to out-of-bounds index L and are dropped.
+        L = cache["k"].shape[1]
+        pos = kv_positions.astype(jnp.int32)
+        slots = pos % L if window is not None else pos
+        wmask = (cache_write_mask if cache_write_mask is not None
+                 else jnp.ones((b, s), dtype=bool))
+        mask = wmask
+        if window is not None and s > 1:
+            mask = _dedup_ring_slots(slots, pos, mask)
+        slots = jnp.where(mask, slots, L)
+        b_idx = jnp.broadcast_to(jnp.arange(b, dtype=jnp.int32)[:, None], (b, s))
+        k_cache = cache["k"].at[b_idx, slots].set(
+            k.astype(cache["k"].dtype), mode="drop")
+        v_cache = cache["v"].at[b_idx, slots].set(
+            v.astype(cache["v"].dtype), mode="drop")
+        pos_cache = cache["pos"].at[b_idx, slots].set(
+            pos.astype(cache["pos"].dtype), mode="drop")
+        valid_cache = cache["valid"].at[b_idx, slots].set(
+            jnp.ones((b, s), bool), mode="drop")
+        new_cache = {"k": k_cache, "v": v_cache, "pos": pos_cache,
+                     "valid": valid_cache}
+        if window is not None and s > 1:
+            # Ring eviction hazard: the ring is window-sized, so this
+            # chunk's writes overwrite slots that EARLIER queries of the
+            # SAME chunk still need (query p0 reaches back to p0-L+1,
+            # exactly the slots positions p0.. reuse). Attend over the
+            # PRE-write ring plus the fresh chunk; the scattered ring
+            # above still carries the post-chunk state forward.
+            k = jnp.concatenate(
+                [cache["k"].astype(q.dtype), k.astype(q.dtype)], axis=1)
+            v = jnp.concatenate(
+                [cache["v"].astype(q.dtype), v.astype(q.dtype)], axis=1)
+            kv_positions = jnp.concatenate([cache["pos"], pos], axis=1)
+            k_valid = jnp.concatenate([cache["valid"], wmask], axis=1)
+        else:
+            k, v = k_cache.astype(q.dtype), v_cache.astype(q.dtype)
+            kv_positions = pos_cache
+            k_valid = valid_cache
+    elif cache is not None:
+        # Legacy scalar-index insert (all slots at one position; ring-buffer
+        # slot for SWA) — bitwise-unchanged training/eval decode path.
         slot = cache_index % cache["k"].shape[1] if window is not None else cache_index
         k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
         v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)

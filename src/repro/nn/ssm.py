@@ -166,12 +166,19 @@ def _causal_conv(seq, w, b):
 
 def ssd_mixer_apply(params, x, *, d_state: int, head_dim: int = 64,
                     expand: int = 2, n_groups: int = 1, chunk: int = 128,
-                    state: Optional[dict] = None, scan_impl=None,
-                    return_state: bool = False):
+                    state: Optional[dict] = None, token_mask=None,
+                    scan_impl=None, return_state: bool = False):
     """Mamba-2 mixer. x: (b, s, d).
 
     state: None for training/prefill-from-scratch. For decode pass
-    {"ssm": (b,h,n,p), "conv": (b, k-1, conv_dim)}; s must be 1.
+    {"ssm": (b,h,n,p), "conv": (b, k-1, conv_dim)}; s = 1 is single-token
+    decode, s > 1 is a state-carrying chunk (chunked prefill continuation).
+    token_mask: optional (b, s) bool — masked tokens are EXACT state
+    no-ops (dt forced to 0 so decay=exp(0)=1 with zero input, and the
+    conv carry window advances only past valid tokens). The valid tokens
+    must be a contiguous prefix of the chunk. This is what lets one
+    jitted serving step carry inactive slots / padded chunk tails
+    without touching their state.
     Returns y, or (y, new_state) when state is given.
     scan_impl: optional override for the chunked scan (Pallas kernel hook).
     """
@@ -185,12 +192,24 @@ def ssd_mixer_apply(params, x, *, d_state: int, head_dim: int = 64,
     conv_in = jnp.concatenate([xr, B, C], axis=-1)     # (b, s, conv_dim)
 
     if state is not None:
-        assert s == 1, "decode path expects a single token"
+        kw = params["conv_w"].shape[0]
         window = jnp.concatenate([state["conv"], conv_in], axis=1)
-        new_conv_state = window[:, 1:, :]
-        conv_out = jnp.sum(
-            window * params["conv_w"].astype(x.dtype)[None], axis=1,
-            keepdims=True) + params["conv_b"].astype(x.dtype)
+        if token_mask is None:
+            # carry = last kw-1 rows (all s tokens advance the window)
+            new_conv_state = window[:, s:, :]
+        else:
+            # valid tokens occupy window rows [kw-1, kw-1+n_valid), so the
+            # carry is rows [n_valid, n_valid+kw-1); n_valid=0 reproduces
+            # the old conv state bitwise (inactive decode slot)
+            n_valid = jnp.sum(token_mask.astype(jnp.int32), axis=1)
+            idx = n_valid[:, None] + jnp.arange(kw - 1, dtype=jnp.int32)[None]
+            new_conv_state = jnp.take_along_axis(window, idx[:, :, None],
+                                                 axis=1)
+        # causal conv continued across the carried window; for
+        # state["conv"] == zeros this matches _causal_conv bitwise
+        conv_out = sum(
+            window[:, i:i + s, :] * params["conv_w"][i].astype(x.dtype)
+            for i in range(kw)) + params["conv_b"].astype(x.dtype)
     else:
         new_conv_state = None
         conv_out = _causal_conv(conv_in, params["conv_w"], params["conv_b"])
@@ -203,12 +222,21 @@ def ssd_mixer_apply(params, x, *, d_state: int, head_dim: int = 64,
     Ch = C.reshape(b, s, n_groups, d_state)
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
                          + params["dt_bias"].astype(jnp.float32))
+    if token_mask is not None:
+        dt = dt * token_mask.astype(dt.dtype)[:, :, None]
     A = -jnp.exp(params["A_log"].astype(jnp.float32))
 
-    if state is not None:
+    if state is not None and s == 1:
         y1, new_ssm = ssd_decode_step(state["ssm"], xh[:, 0], dt[:, 0],
                                       A, Bh[:, 0], Ch[:, 0])
         y = y1[:, None]
+        new_state = {"ssm": new_ssm, "conv": new_conv_state}
+    elif state is not None:
+        # state-carrying chunk: always the reference scan — kernel impls
+        # need not support initial_state, and serving chunks are short
+        y, new_ssm = ssd_scan_ref(xh, dt, A, Bh, Ch, chunk=chunk,
+                                  initial_state=state["ssm"],
+                                  return_final_state=True)
         new_state = {"ssm": new_ssm, "conv": new_conv_state}
     elif return_state:
         # prefill: emit the decode state (SSM carry + conv tail window)

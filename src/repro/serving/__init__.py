@@ -1,1 +1,3 @@
 from repro.serving.engine import ServingEngine, Request
+from repro.serving.frontend import ServingFrontend
+from repro.serving import cache

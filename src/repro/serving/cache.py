@@ -1,0 +1,127 @@
+"""Paged (blocked) decode-cache backend for the serving engine.
+
+Dense serving caches reserve `batch_size x max_len` KV worst-case per
+full-attention sublayer. The paged backend replaces each of those caches
+with a shared BLOCK POOL plus per-slot block tables (vLLM-style):
+
+    pool  {"k"/"v": (G, n_blocks, block_size, kv_heads, head_dim),
+           "pos"/"valid": (G, n_blocks, block_size)}
+    table (batch, max_blocks) int32 rows of pool block ids
+
+so persistent memory scales with LIVE TOKENS (allocated blocks), not the
+worst case. Block 0 is reserved as the never-allocated null block —
+padding table entries point at it, it is never written, and its `valid`
+bits stay False, so gathered views through it mask cleanly.
+
+Only full-attention sublayers page: a sliding-window cache is already a
+bounded per-slot ring, and SSM/conv state is O(1) per slot. Cross-attn
+caches are filled once at admission and stay dense.
+
+Allocation is host-side (`BlockAllocator` free list); the jitted step
+only ever sees the pool + tables, so admission/retirement never
+recompiles anything.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.backbone import init_decode_caches
+
+_ATTN_KINDS = ("attn", "attn_local", "attn_global", "shared_attn")
+
+
+def paged_sub_names(cfg: ArchConfig) -> tuple:
+    """The 'subI' pattern entries that page: full-attention sublayers."""
+    return tuple(
+        f"sub{i}" for i, kind in enumerate(cfg.group_pattern)
+        if kind in _ATTN_KINDS and cfg.sublayer_window(kind) is None)
+
+
+def slot_max_blocks(max_len: int, block_size: int) -> int:
+    return -(-max_len // block_size)
+
+
+def _block_pool(cfg: ArchConfig, n_blocks: int, block_size: int, dtype):
+    hd = cfg.resolved_head_dim
+    kv = cfg.n_kv_heads
+    return {
+        "k": jnp.zeros((n_blocks, block_size, kv, hd), dtype=dtype),
+        "v": jnp.zeros((n_blocks, block_size, kv, hd), dtype=dtype),
+        "pos": jnp.zeros((n_blocks, block_size), dtype=jnp.int32),
+        "valid": jnp.zeros((n_blocks, block_size), dtype=bool),
+    }
+
+
+def init_paged_caches(cfg: ArchConfig, batch: int, max_len: int, *,
+                      block_size: int, n_blocks: Optional[int] = None,
+                      dtype=jnp.float32):
+    """Serving caches with full-attention sublayers replaced by block
+    pools (leading group axis kept for the backbone scan).
+
+    n_blocks defaults to the dense worst case (batch x max_blocks + the
+    null block); pass less to cap pool memory — admission then queues
+    when the pool is exhausted. Returns (caches, meta).
+    """
+    mb = slot_max_blocks(max_len, block_size)
+    if n_blocks is None:
+        n_blocks = batch * mb + 1
+    caches = init_decode_caches(cfg, batch, max_len, dtype=dtype)
+    g = cfg.n_groups_stack
+    paged = paged_sub_names(cfg)
+    for name in paged:
+        pool = _block_pool(cfg, n_blocks, block_size, dtype)
+        caches[name] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (g,) + x.shape).copy(), pool)
+    meta = {"block_size": block_size, "n_blocks": n_blocks,
+            "max_blocks": mb, "paged_subs": paged}
+    return caches, meta
+
+
+def invalidate_blocks(caches, paged_subs, block_ids):
+    """Mark pool blocks `block_ids` (padded with 0 — the null block is
+    idempotently already-invalid) as invalid in every paged sublayer.
+    Called on request retirement so reused blocks never leak stale
+    valid entries into a later owner's gathered view."""
+    out = dict(caches)
+    for name in paged_subs:
+        sub = caches[name]
+        out[name] = {**sub,
+                     "valid": sub["valid"].at[:, block_ids].set(False)}
+    return out
+
+
+def cache_bytes(caches) -> int:
+    """Persistent cache footprint in bytes (pools + dense leaves)."""
+    return int(sum(x.size * x.dtype.itemsize
+                   for x in jax.tree_util.tree_leaves(caches)))
+
+
+class BlockAllocator:
+    """Host-side free list over pool blocks 1..n_blocks-1 (0 is null)."""
+
+    def __init__(self, n_blocks: int):
+        self.n_blocks = n_blocks
+        self._free = list(range(n_blocks - 1, 0, -1))
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int):
+        """Pop n block ids, or None when the pool can't satisfy it."""
+        if n == 0:
+            return []
+        if n > len(self._free):
+            return None
+        got = self._free[-n:][::-1]
+        del self._free[-n:]
+        return got
+
+    def free(self, block_ids):
+        for b in block_ids:
+            assert 0 < b < self.n_blocks
+            self._free.append(b)

@@ -312,6 +312,19 @@ def _tp_entry_specs(tree, device_axes, stacked: bool, tp_axis: str,
     return jax.tree_util.tree_unflatten(treedef, specs)
 
 
+def tp_param_specs(tree, tp_axis: str, tp: int):
+    """Public per-leaf shard_map specs for a bare parameter tree with
+    in-slice Megatron TP: each TP-named leaf (`tp_leaf_dim` name rules)
+    carries `tp_axis` on its shard dim, everything else replicates.
+
+    This is the train-to-serve contract: a serving engine wraps its
+    decode step in shard_map with these in_specs and an unmodified
+    GLOBAL-shaped training checkpoint shards on entry, exactly as
+    `shard_round_state_specs` shards it for training. Call with the
+    GLOBAL tree (divisibility is decided on global dims)."""
+    return _tp_entry_specs(tree, (), False, tp_axis, tp)
+
+
 def shard_round_state_specs(state, device_axes,
                             stacked_keys=("disc_opt",),
                             tp_axis=None, tp: int = 1) -> dict:

@@ -1,4 +1,10 @@
-"""Batched serving engine: correctness against step-by-step decoding."""
+"""Batched serving engine: correctness against step-by-step decoding,
+the mixed-workload matrix (staggered admissions at distinct positions,
+chunked prefill interleaved with decode, paged-vs-dense equivalence),
+and the host-side scheduling contracts (FIFO admission, rejection path,
+prefill compile-count bound)."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -54,3 +60,158 @@ def test_more_requests_than_slots_all_complete():
     finished = engine.run()
     assert sorted(r.rid for r in finished) == list(range(5))
     assert all(len(r.out_tokens) == 3 for r in finished)
+
+
+def test_staggered_admissions_decode_in_a_single_step():
+    """The ISSUE regression test: slots admitted at different times sit
+    at DISTINCT positions, and one step() — one jitted dispatch — must
+    advance all of them at once (no position grouping, no head-of-line
+    blocking). Also pins prefill-during-decode: the same dispatch that
+    prefills a new slot's chunk keeps every decoding slot moving."""
+    cfg = get_arch_config("qwen3-1.7b").reduced()
+    params = gan.generator_init(KEY, cfg)
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, cfg.vocab, n).astype(np.int32)
+               for n in (4, 9, 6)]
+
+    engine = ServingEngine(cfg, params, batch_size=3, max_len=48,
+                           block_size=8, prefill_chunk=4)
+    engine.submit(Request(rid=0, prompt=prompts[0], max_new_tokens=12))
+    for _ in range(5):          # r0 prefills (1 chunk) and decodes ahead
+        assert engine.step()
+
+    # stagger: admit r1/r2 while r0 is mid-decode
+    engine.submit(Request(rid=1, prompt=prompts[1], max_new_tokens=12))
+    engine.submit(Request(rid=2, prompt=prompts[2], max_new_tokens=12))
+    r0 = engine.slots[0].req
+    before = len(r0.out_tokens)
+    d0 = engine.dispatch_count
+    while not all(s is not None and s.prefilled for s in engine.slots):
+        assert engine.step()    # r1/r2 prefill chunks ride along
+    # prefill-during-decode: r0 kept emitting one token per dispatch
+    assert len(r0.out_tokens) - before == engine.dispatch_count - d0
+
+    # all three slots now decode at DISTINCT positions...
+    positions = [s.pos for s in engine.slots]
+    assert len(set(positions)) == 3
+    counts = [len(s.req.out_tokens) for s in engine.slots]
+    d0 = engine.dispatch_count
+    assert engine.step()
+    # ...and ONE dispatch advanced every one of them by exactly 1 token
+    assert engine.dispatch_count == d0 + 1
+    assert [len(s.req.out_tokens) for s in engine.slots] == \
+        [c + 1 for c in counts]
+    assert [s.pos for s in engine.slots] == [p + 1 for p in positions]
+
+    finished = engine.run()
+    assert sorted(r.rid for r in finished) == [0, 1, 2]
+    for req in finished:        # staggering never changes the tokens
+        ref = greedy_reference(cfg, params, req.prompt, 12)
+        np.testing.assert_array_equal(np.asarray(req.out_tokens), ref,
+                                      err_msg=f"request {req.rid}")
+
+
+@pytest.mark.parametrize("name", ["qwen3-1.7b", "gemma3-12b"])
+def test_mixed_workload_paged_matches_dense(name):
+    """Mixed prompt lengths and temperatures through BOTH cache
+    backends: the paged engine must emit bitwise-identical token streams
+    (sampling is keyed by (seed, rid, token_index), so the backend can
+    never leak into the output), and the greedy requests must match the
+    full-forward reference."""
+    cfg = get_arch_config(name).reduced()
+    params = gan.generator_init(KEY, cfg)
+    rng = np.random.default_rng(3)
+    workload = [(rng.integers(0, cfg.vocab,
+                              int(rng.integers(2, 14))).astype(np.int32),
+                 int(rng.integers(2, 7)), temp)
+                for temp in (0.0, 0.8, 0.0, 0.8, 0.0)]
+
+    outs = {}
+    for block in (None, 8):
+        engine = ServingEngine(cfg, params, batch_size=2, max_len=32,
+                               block_size=block, prefill_chunk=4, seed=7)
+        for i, (p, n, t) in enumerate(workload):
+            engine.submit(Request(rid=i, prompt=p, max_new_tokens=n,
+                                  temperature=t))
+        finished = engine.run()
+        assert len(finished) == len(workload)
+        outs[block] = {r.rid: list(r.out_tokens) for r in finished}
+    assert outs[None] == outs[8]            # paged == dense, bitwise
+
+    for i, (p, n, t) in enumerate(workload):
+        if t == 0.0:
+            ref = greedy_reference(cfg, params, p, n)
+            np.testing.assert_array_equal(np.asarray(outs[8][i]), ref,
+                                          err_msg=f"request {i}")
+
+
+def test_rejection_path_keeps_engine_running():
+    """Requests that can never fit are marked failed with a reason and
+    the engine serves everyone else — no assert, no dead engine."""
+    cfg = get_arch_config("granite-3-2b").reduced()
+    params = gan.generator_init(KEY, cfg)
+    rng = np.random.default_rng(4)
+    ok = lambda rid: Request(
+        rid=rid, prompt=rng.integers(0, cfg.vocab, 4).astype(np.int32),
+        max_new_tokens=3)
+    engine = ServingEngine(cfg, params, batch_size=2, max_len=16)
+    engine.submit(ok(0))
+    engine.submit(Request(rid=1, prompt=rng.integers(
+        0, cfg.vocab, 20).astype(np.int32), max_new_tokens=8))  # 28 > 16
+    engine.submit(Request(rid=2, prompt=np.zeros(0, np.int32)))
+    engine.submit(ok(3))
+    finished = engine.run()
+    assert sorted(r.rid for r in finished) == [0, 3]
+    assert [r.rid for r in engine.rejected] == [1, 2]
+    assert "max_len" in engine.rejected[0].failed
+    assert "empty" in engine.rejected[1].failed
+    assert all(not r.done for r in engine.rejected)
+
+
+def test_admission_is_fifo_by_submission_order():
+    """deque admission: with one slot, requests are served strictly in
+    submission order (rid order), whatever their sizes."""
+    cfg = get_arch_config("granite-3-2b").reduced()
+    params = gan.generator_init(KEY, cfg)
+    rng = np.random.default_rng(5)
+    engine = ServingEngine(cfg, params, batch_size=1, max_len=32,
+                           block_size=8)
+    for i, n in enumerate((9, 2, 13, 5)):
+        engine.submit(Request(
+            rid=i, prompt=rng.integers(0, cfg.vocab, n).astype(np.int32),
+            max_new_tokens=2))
+    finished = engine.run()
+    assert [r.rid for r in finished] == [0, 1, 2, 3]
+
+
+def test_prefill_compile_count_is_log_bounded():
+    """Power-of-two prefill buckets: any mix of prompt lengths compiles
+    at most 1 (decode-only) + log2(prefill_chunk) + 1 step programs."""
+    cfg = get_arch_config("granite-3-2b").reduced()
+    params = gan.generator_init(KEY, cfg)
+    rng = np.random.default_rng(6)
+    chunk = 8
+    engine = ServingEngine(cfg, params, batch_size=2, max_len=64,
+                           block_size=8, prefill_chunk=chunk)
+    for i, n in enumerate((1, 2, 3, 5, 7, 9, 12, 17, 23)):
+        engine.submit(Request(
+            rid=i, prompt=rng.integers(0, cfg.vocab, n).astype(np.int32),
+            max_new_tokens=2))
+    finished = engine.run()
+    assert len(finished) == 9
+    bound = 1 + int(np.log2(chunk)) + 1          # {None, 1, 2, 4, 8}
+    assert engine.compile_count <= bound
+
+
+def test_tp_construction_guards():
+    """Fast-lane: MoE and fuse_proj configs must refuse tensor-parallel
+    serving up front (mirrors models/specs.py), single device is enough
+    to hit both."""
+    params = None
+    cfg = get_arch_config("mixtral-8x22b").reduced()
+    with pytest.raises(ValueError, match="MoE"):
+        ServingEngine(cfg, params, tp=2)
+    cfg = dataclasses.replace(get_arch_config("qwen3-1.7b").reduced(),
+                              fuse_proj=True)
+    with pytest.raises(ValueError, match="fuse_proj"):
+        ServingEngine(cfg, params, tp=2)
